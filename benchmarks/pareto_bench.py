@@ -1,0 +1,27 @@
+"""Paper Figs 4-6: CORDIC error Pareto sweeps (bits x iterations) for
+sigmoid / tanh / SoftMax (+ the MAC, §4.3)."""
+from __future__ import annotations
+
+import time
+
+from repro.core import pareto
+
+
+def run(csv_rows):
+    t0 = time.time()
+    report = pareto.full_report(iterations=(2, 3, 4, 5, 6, 8, 10, 12),
+                                n_samples=512)
+    dt_us = (time.time() - t0) * 1e6
+    knees = {}
+    for fn, pts in report.items():
+        knees[fn] = pareto.knee(pts, "mae")
+        for p in pts:
+            if p.bits == 8 and p.iterations in (2, 5, 8):
+                csv_rows.append(
+                    (f"pareto_{fn}_8b_{p.iterations}it", dt_us / len(pts),
+                     f"mae={p.mae:.2e}"))
+    # headline: the paper's 5+2 conclusion — knee at or below 5 for 8-bit
+    for fn in ("sigmoid", "tanh", "softmax", "mac"):
+        csv_rows.append((f"pareto_knee_{fn}_8bit", dt_us / 4,
+                         f"knee_iterations={knees[fn].get(8, '-')}"))
+    return report

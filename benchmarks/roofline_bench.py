@@ -1,0 +1,44 @@
+"""Roofline summary rows from the dry-run records (EXPERIMENTS.md source).
+
+Re-derives the three roofline terms with the current analytic model for a
+representative subset (fast, no compilation), and reads the stored 80-cell
+sweep (dryrun_baseline.jsonl) when present for the compiled-artifact
+figures.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.analysis.costmodel import MeshSpec, step_costs
+from repro.analysis.roofline import analyze
+from repro.configs import LM_SHAPES, get_arch
+
+REPRESENTATIVE = [
+    ("glm4-9b", "train_4k"), ("glm4-9b", "decode_32k"),
+    ("arctic-480b", "train_4k"), ("granite-moe-3b-a800m", "train_4k"),
+    ("qwen2.5-14b", "prefill_32k"), ("rwkv6-3b", "long_500k"),
+]
+
+
+def run(csv_rows):
+    mesh = MeshSpec(data=16, model=16)
+    for arch, shape in REPRESENTATIVE:
+        t0 = time.time()
+        cfg = get_arch(arch)
+        row = analyze(cfg, LM_SHAPES[shape], mesh)
+        dt_us = (time.time() - t0) * 1e6
+        csv_rows.append((
+            f"roofline_{arch}_{shape}", dt_us,
+            f"bottleneck={row.bottleneck};frac={row.roofline_fraction:.3f};"
+            f"step_s={row.step_time_s:.3e}"))
+    path = "dryrun_baseline.jsonl"
+    if os.path.exists(path):
+        rows = [json.loads(l) for l in open(path)]
+        ok = sum(r["status"] == "ok" for r in rows)
+        skip = sum(r["status"] == "skipped" for r in rows)
+        err = sum(r["status"] == "error" for r in rows)
+        csv_rows.append(("dryrun_sweep", 0.0,
+                         f"cells={len(rows)};ok={ok};skipped={skip};"
+                         f"errors={err}"))

@@ -1,0 +1,54 @@
+"""Benchmark harness - one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  * pareto_*    - Figs 4/5/6 error sweeps + knee detection
+  * mac_*       - Tables 4/5/6 MAC comparison (f32 / FxP8-int8 / bit-exact
+                  CORDIC kernel) + SYCore 3 GHz throughput model
+  * caesar_*    - Table 3 VGG-16 mapping + pruning co-design speedups
+  * accuracy_*  - Fig 11 accuracy under CORDIC execution (+QAT recovery)
+  * roofline_*  - roofline terms for representative (arch x shape) cells
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="pareto|mac|caesar|accuracy|roofline")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (accuracy_bench, caesar_bench, mac_bench,
+                            pareto_bench, roofline_bench)
+    suites = {
+        "pareto": pareto_bench.run,
+        "mac": mac_bench.run,
+        "caesar": caesar_bench.run,
+        "accuracy": accuracy_bench.run,
+        "roofline": roofline_bench.run,
+    }
+    if args.only:
+        suites = {args.only: suites[args.only]}
+
+    rows = []
+    failed = 0
+    for name, fn in suites.items():
+        try:
+            fn(rows)
+        except Exception:
+            failed += 1
+            print(f"# suite {name} FAILED:", file=sys.stderr)
+            traceback.print_exc()
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

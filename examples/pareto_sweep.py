@@ -1,0 +1,25 @@
+"""Regenerate the paper's Pareto figures (Figs 4-6) as CSV.
+
+    PYTHONPATH=src python examples/pareto_sweep.py > pareto.csv
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import pareto
+
+
+def main():
+    print("fn,bits,iterations,mse,mae,avg_rel_err,std")
+    report = pareto.full_report(iterations=tuple(range(2, 13)),
+                                n_samples=1024)
+    for fn, pts in report.items():
+        for p in pts:
+            print(p.row())
+    knees = {fn: pareto.knee(pts, "mae") for fn, pts in report.items()}
+    print(f"# knees (iterations where improvement < 10%): {knees}",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Paper Fig 11 as a runnable example: train f32, evaluate under CORDIC
+FxP8 execution, prune 40%, QAT-recover.  (Also run by benchmarks/run.py.)
+
+    PYTHONPATH=src python examples/train_cordic_classifier.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+from benchmarks import accuracy_bench
+
+
+def main():
+    rows = []
+    accuracy_bench.run(rows)
+    for name, _, derived in rows:
+        print(f"{name:28s} {derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Generate the EXPERIMENTS.md roofline tables from dry-run JSONL records.
+
+Usage: PYTHONPATH=src python -m repro.analysis.report dryrun_baseline.jsonl
+Prints the §Roofline markdown table (stored analytic terms as compiled,
+plus current-model re-derivation for comparison).
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List
+
+from repro.analysis.costmodel import MeshSpec, step_costs
+from repro.analysis.roofline import HBM_PER_CHIP, LINK_BW, PEAK_FLOPS, analyze
+from repro.configs import LM_SHAPES, get_arch
+
+
+def load(path: str) -> List[dict]:
+    return [json.loads(l) for l in open(path)]
+
+
+def mesh_spec_of(tag: str) -> MeshSpec:
+    parts = [int(x) for x in tag.split("x")]
+    if len(parts) == 3:
+        return MeshSpec(pod=parts[0], data=parts[1], model=parts[2])
+    return MeshSpec(data=parts[0], model=parts[1])
+
+
+def markdown_table(rows: List[dict], mesh_filter: str = "16x16") -> str:
+    hdr = ("| arch | shape | compute_s | memory_s | collective_s | "
+           "bottleneck | roofline | useful | GB/dev | fits |\n"
+           "|---|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        if r["status"] == "skipped":
+            if r["mesh"] == mesh_filter or (mesh_filter == "16x16" and
+                                            r["mesh"] == "16x16"):
+                lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                             f"skipped | — | — | — | — |")
+            continue
+        if r["mesh"] != mesh_filter:
+            continue
+        gb = "" if r.get("bytes_per_device") is None else \
+            f"{r['bytes_per_device'] / 2 ** 30:.1f}"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"{r['bottleneck']} | {r['roofline_fraction']:.3f} | "
+            f"{r['useful_ratio']:.2f} | {gb} | {r['fits_hbm']} |")
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    path = (argv or sys.argv[1:])[0] if (argv or sys.argv[1:]) else \
+        "dryrun_baseline.jsonl"
+    rows = load(path)
+    ok = [r for r in rows if r["status"] in ("ok", "skipped")]
+    print("## Single-pod (16x16)\n")
+    print(markdown_table(ok, "16x16"))
+    print("\n## Multi-pod (2x16x16)\n")
+    print(markdown_table(ok, "2x16x16"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,228 @@
+"""Roofline analysis: three terms per (arch x shape x mesh).
+
+    compute    = FLOPs / (peak_FLOP/s)            [per device]
+    memory     = HBM bytes / HBM_bw               [per device]
+    collective = on-link collective bytes / link_bw
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI.  (The spec's "X / (chips x peak)" form uses global sums; we work with
+per-device quantities, which is the same number.)
+
+Two sources feed the report:
+  * the ANALYTIC model (:mod:`repro.analysis.costmodel`) — primary, because
+    XLA cost_analysis counts scan bodies once (see costmodel docstring),
+  * the COMPILED artifact — memory_analysis (fits / doesn't), raw
+    cost_analysis, and HLO-parsed collective bytes with a while-body
+    trip-count correction (collectives in non-entry computations are
+    multiplied by n_layers, since every collective in these models lives in
+    the layer scan body).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.analysis.costmodel import CostReport, MeshSpec, step_costs
+from repro.configs.base import ArchConfig, ShapeConfig
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s per ICI link
+HBM_PER_CHIP = 16 * 2 ** 30  # v5e
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "s16": 2,
+                "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLLECTIVE_OP_RE = re.compile(
+    r"=\s*(.*?)\s*(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def parse_hlo_collectives(hlo_text: str, layer_trips: int = 1
+                          ) -> Tuple[float, Dict[str, float]]:
+    """Sum collective payload bytes from a post-SPMD HLO module.
+
+    Shapes in the partitioned module are already per-device; result shapes
+    (including tuple results) are summed per op.  Ops found in non-entry
+    computations (while bodies — the layer scan) are multiplied by
+    ``layer_trips``.  ``*-done`` halves of async pairs are not double
+    counted (only ``*-start``/sync forms match).
+    """
+    by_kind: Dict[str, float] = {}
+    total = 0.0
+    in_entry = False
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if stripped.startswith("ENTRY"):
+            in_entry = True
+            continue
+        if line and not line[0].isspace() and line.rstrip().endswith("{"):
+            in_entry = stripped.startswith("ENTRY")
+        m = _COLLECTIVE_OP_RE.search(line)
+        if not m:
+            continue
+        shapes_str, kind = m.groups()
+        payload = 0
+        for dtype, dims in _SHAPE_RE.findall(shapes_str):
+            nbytes = _DTYPE_BYTES.get(dtype, 4)
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            payload += n * nbytes
+        mult = 1 if in_entry else layer_trips
+        by_kind[kind] = by_kind.get(kind, 0.0) + payload * mult
+        total += payload * mult
+    return total, by_kind
+
+
+_CONVERT_RE = re.compile(r"=\s*f32\[([\d,]+)\][^=]*\bconvert\(")
+
+
+def cpu_upcast_correction(hlo_text: str, param_shard_shapes) -> float:
+    """Estimate bytes of XLA:CPU's bf16->f32 weight upcasts.
+
+    The CPU backend cannot execute bf16 dots natively, so it converts
+    weight operands to f32 — and loop-invariant code motion hoists those
+    converts out of the layer scan, holding a whole f32 copy of every
+    stacked weight.  TPU executes bf16 on the MXU directly, so these
+    buffers do not exist on the target.  We count each distinct f32
+    convert whose shape matches a per-device weight shard, bounded by the
+    number of leaves with that shape.
+
+    param_shard_shapes: list of per-device weight shard shape tuples.
+    """
+    from collections import Counter
+    shape_counts = Counter(tuple(s) for s in param_shard_shapes)
+    seen = Counter()
+    for m in _CONVERT_RE.finditer(hlo_text):
+        dims = tuple(int(d) for d in m.group(1).split(",") if d)
+        if dims in shape_counts:
+            seen[dims] += 1
+    bytes_total = 0.0
+    for dims, cnt in seen.items():
+        n = min(cnt, shape_counts[dims])
+        numel = 1
+        for d in dims:
+            numel *= d
+        bytes_total += 4.0 * numel * n
+    return bytes_total
+
+
+@dataclasses.dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float
+    hlo_flops_raw: Optional[float]
+    analytic_flops: float
+    useful_ratio: float
+    bytes_per_device: Optional[float]
+    fits_hbm: Optional[bool]
+    hlo_collective_bytes: Optional[float]
+    cpu_upcast_bytes: float = 0.0
+    note: str = ""
+
+    @property
+    def step_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-model-compute time / bound step time (the score)."""
+        n_chips = 1  # per-device accounting throughout
+        ideal = self.model_flops_per_dev / PEAK_FLOPS
+        return ideal / self.step_time_s if self.step_time_s else 0.0
+
+    @property
+    def model_flops_per_dev(self) -> float:
+        return self.model_flops / self._chips
+
+    _chips: int = 1
+
+    def as_dict(self):
+        d = dataclasses.asdict(self)
+        d.update(step_time_s=self.step_time_s,
+                 roofline_fraction=self.roofline_fraction)
+        return d
+
+
+def analyze(cfg: ArchConfig, shape: ShapeConfig, mesh: MeshSpec,
+            memory_analysis=None, cost_analysis=None,
+            hlo_text: Optional[str] = None, note: str = "",
+            param_shard_shapes=None) -> RooflineRow:
+    cr = step_costs(cfg, shape, mesh)
+    # the paper's FxP8 path runs matmuls on the MXU int8 datapath: 2x bf16
+    # peak (394 TOPS on v5e)
+    peak = PEAK_FLOPS * (2.0 if cfg.exec_policy.matmul == "fxp8" else 1.0)
+    compute_s = cr.flops / peak
+    memory_s = cr.hbm_bytes / HBM_BW
+    coll_s = cr.collective_bytes / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": coll_s}
+    bottleneck = max(terms, key=terms.get)
+
+    hlo_flops = None
+    if cost_analysis:
+        hlo_flops = float(cost_analysis.get("flops", 0.0))
+    bytes_dev = None
+    fits = None
+    if memory_analysis is not None:
+        try:
+            bytes_dev = float(
+                memory_analysis.temp_size_in_bytes
+                + memory_analysis.argument_size_in_bytes
+                + memory_analysis.output_size_in_bytes
+                - memory_analysis.alias_size_in_bytes)
+        except AttributeError:
+            bytes_dev = None
+        if bytes_dev is not None:
+            fits = bytes_dev <= HBM_PER_CHIP
+    hlo_coll = None
+    upcast = 0.0
+    if hlo_text is not None:
+        hlo_coll, _ = parse_hlo_collectives(hlo_text, cfg.n_layers)
+        if param_shard_shapes:
+            upcast = cpu_upcast_correction(hlo_text, param_shard_shapes)
+            if bytes_dev is not None:
+                bytes_dev = max(bytes_dev - upcast, 0.0)
+                fits = bytes_dev <= HBM_PER_CHIP
+
+    row = RooflineRow(
+        arch=cfg.name, shape=shape.name,
+        mesh=f"{mesh.pod}x{mesh.data}x{mesh.model}" if mesh.pod > 1
+        else f"{mesh.data}x{mesh.model}",
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        bottleneck=bottleneck, model_flops=cr.model_flops,
+        hlo_flops_raw=hlo_flops, analytic_flops=cr.flops,
+        useful_ratio=(cr.model_flops / mesh.n_chips) / max(cr.flops, 1.0),
+        bytes_per_device=bytes_dev, fits_hbm=fits,
+        hlo_collective_bytes=hlo_coll, cpu_upcast_bytes=upcast, note=note)
+    row._chips = mesh.n_chips
+    return row
+
+
+def table(rows: List[RooflineRow]) -> str:
+    hdr = ("arch,shape,mesh,compute_s,memory_s,collective_s,bottleneck,"
+           "roofline_frac,useful_ratio,bytes_per_dev_GB,fits,note")
+    lines = [hdr]
+    for r in rows:
+        gb = "" if r.bytes_per_device is None else \
+            f"{r.bytes_per_device / 2**30:.2f}"
+        lines.append(
+            f"{r.arch},{r.shape},{r.mesh},{r.compute_s:.4e},"
+            f"{r.memory_s:.4e},{r.collective_s:.4e},{r.bottleneck},"
+            f"{r.roofline_fraction:.3f},{r.useful_ratio:.3f},{gb},"
+            f"{r.fits_hbm},{r.note}")
+    return "\n".join(lines)

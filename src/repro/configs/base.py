@@ -1,0 +1,165 @@
+"""Config system: architecture + execution + shape descriptors.
+
+Every assigned architecture is a :class:`ArchConfig`; the paper's technique
+enters through :class:`ExecutionPolicy` (CORDIC FxP8 matmul path, DA-VINCI
+AFs, CAESAR pruning) which every layer consults.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+from repro.core.activations import CordicPolicy
+from repro.core.pruning import PruningPolicy
+from repro.core.quantization import QuantPolicy
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPolicy:
+    """How linear algebra + AFs execute (the RPE's runtime configuration).
+
+    matmul:
+      "bf16"         — plain MXU bf16 (reference baseline)
+      "fxp8"         — CORDIC-equivalent int8 quantized path (production
+                       mapping of the paper's 5-stage FxP8 MAC; W8A8)
+      "fxp8_weight"  — W8A16 (weight-only)
+      "cordic_kernel"— bit-exact Pallas shift-add kernel (validation scale)
+    af: None  => exact float AFs;  CordicPolicy => DA-VINCI CORDIC AFs.
+    """
+
+    matmul: str = "bf16"
+    af: Optional[CordicPolicy] = None
+    pruning: Optional[PruningPolicy] = None
+    quant: QuantPolicy = QuantPolicy()
+    softmax_cordic: bool = False    # CORDIC softmax in attention (fidelity
+                                    # study; exact softmax otherwise)
+    moe_pure_dp: bool = False       # treat the whole mesh as data-parallel
+                                    # for MoE (small models over-sharded at
+                                    # tp=16; see EXPERIMENTS.md #Perf)
+    fsdp_int8_gather: bool = False  # FxP8 transport for FSDP expert-weight
+                                    # all-gathers (CAESAR co-design on
+                                    # collectives)
+
+    def tag(self) -> str:
+        parts = [self.matmul]
+        if self.af is not None:
+            parts.append(f"af{self.af.bits}")
+        if self.pruning is not None:
+            parts.append(f"p{int(self.pruning.rate * 100)}")
+        return "-".join(parts)
+
+
+BF16_EXEC = ExecutionPolicy()
+# Paper-faithful production policy: FxP8 MACs + CORDIC AFs + 40% pruning.
+CORDIC_EXEC = ExecutionPolicy(matmul="fxp8", af=CordicPolicy(bits=16),
+                              pruning=PruningPolicy(rate=0.40))
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    """One architecture from the assigned pool."""
+
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    # transformer details
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False
+    norm_eps: float = 1e-5
+    activation: str = "silu"       # FFN activation (DA-VINCI selectable)
+    tie_embeddings: bool = False
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    dense_residual: bool = False   # arctic: dense FFN + MoE in parallel
+    capacity_factor: float = 1.25
+    # SSM / hybrid
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    sliding_window: int = 0        # hybrid local-attention window
+    global_attn_every: int = 0     # hybrid: every k-th layer is global
+    # modality stub ("tokens" | "frames")
+    input_kind: str = "tokens"
+    n_codebooks: int = 0           # musicgen EnCodec codebooks
+    # execution
+    exec_policy: ExecutionPolicy = BF16_EXEC
+    # attention implementation: "auto" | "naive" | "chunked"
+    attn_impl: str = "auto"
+    attn_chunk: int = 1024
+    kv_cache_bits: int = 16        # 8 => FxP8 (Q3.4) quantized KV cache
+    fuse_moe_ffn_ar: bool = False  # fuse dense-residual FFN into the MoE
+                                   # psum (one AR per layer instead of two)
+    remat: bool = True
+    dtype: str = "bfloat16"
+
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def supports_long_context(self) -> bool:
+        return self.family in ("ssm", "hybrid")
+
+    def scaled(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+    def reduced(self) -> "ArchConfig":
+        """Smoke-test configuration of the same family (tiny dims)."""
+        kw = dict(
+            n_layers=2,
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=max(1, min(self.n_kv_heads, 2)),
+            d_ff=128,
+            vocab_size=256,
+            head_dim=16,
+            sliding_window=min(self.sliding_window, 32) if self.sliding_window else 0,
+        )
+        if self.n_experts:
+            kw.update(n_experts=4, top_k=min(self.top_k, 2), moe_d_ff=32,
+                      capacity_factor=2.0)
+        if self.ssm_state:
+            kw.update(ssm_state=8)
+        if self.n_codebooks:
+            kw.update(n_codebooks=2)
+        kw["attn_chunk"] = 16
+        kw["remat"] = False
+        return self.scaled(**kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One input-shape cell (the assigned shape set)."""
+
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+LM_SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524288, 1),
+}
+
+
+def shape_applicable(arch: ArchConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether this (arch x shape) cell runs; reason if skipped."""
+    if shape.name == "long_500k" and not arch.supports_long_context:
+        return False, ("pure full-attention arch: 500k decode would need a "
+                       "524288-token dense KV cache per sequence — "
+                       "sub-quadratic families only (see DESIGN.md)")
+    return True, ""

@@ -1,0 +1,21 @@
+"""The paper's primary contribution, in JAX.
+
+Layers:
+  fixed_point  - FxP quantization substrate (raw int32 words).
+  cordic       - linear / hyperbolic / vectoring CORDIC recurrences.
+  activations  - DA-VINCI runtime-configurable AF with STE gradients.
+  rpe          - 5+2-stage Reconfigurable Processing Engine + cycle model.
+  sycore       - output-stationary systolic array model + dataflow oracle.
+  caesar       - scheduler: workload mapping, pruning/quant co-design,
+                 adaptive VMEM tiling for the Pallas path.
+  pareto       - stage-count/precision error sweeps (paper Figs 4-6).
+  pruning      - 40% magnitude + N:M structured sparsity.
+  quantization - FxP8 (int8) production matmul path with STE.
+"""
+from repro.core.activations import CordicPolicy, activate  # noqa: F401
+from repro.core.fixed_point import FXP4, FXP8, FXP16, FXP32, FxpFormat  # noqa: F401
+from repro.core.pruning import PruningPolicy  # noqa: F401
+from repro.core.quantization import QuantPolicy  # noqa: F401
+from repro.core.rpe import RPE  # noqa: F401
+from repro.core.sycore import SYCoreConfig  # noqa: F401
+from repro.core.caesar import Caesar  # noqa: F401

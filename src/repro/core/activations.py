@@ -1,0 +1,216 @@
+"""DA-VINCI: Dynamically-configurable Activation functions via CORDIC.
+
+One shared CORDIC datapath (hyperbolic rotation + linear vectoring + linear
+rotation) realises every AF the paper lists — tanh, sigmoid, SoftMax, ReLU,
+GeLU, SeLU, Swish — selected at runtime by ``sel_af`` (here: a string in the
+:class:`CordicPolicy`).  The hyperbolic stage is shared across 6/7 functions
+(the paper's "86% reuse factor"); division across 5/7 ("72%").
+
+Gradients: the fixed-point CORDIC forward is a step function, so for
+training we expose every AF through a straight-through estimator (STE): the
+forward pass is the bit-accurate CORDIC value, the backward pass is the
+analytic derivative of the exact function.  This is the standard
+quantization-aware-training contract and matches how the paper fine-tunes
+pruned/quantized models to recover accuracy (Section 4.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cordic, fixed_point as fxp
+from repro.core.fixed_point import FxpFormat
+
+Array = jax.Array
+
+SUPPORTED_AFS = ("relu", "tanh", "sigmoid", "softmax", "gelu", "selu", "swish",
+                 "silu", "exp", "identity")
+
+_SELU_ALPHA = 1.6732632423543772
+_SELU_LAMBDA = 1.0507009873554805
+_GELU_C = math.sqrt(2.0 / math.pi)
+
+
+@dataclasses.dataclass(frozen=True)
+class CordicPolicy:
+    """Runtime-reconfigurable RPE datapath configuration (the ``sel_*`` pins).
+
+    ``n_linear/n_hyperbolic/n_division`` mirror the paper's 5+2 architecture
+    defaults; ``bits`` selects FxP4/8/16/32; ``range_extend`` is our TPU-side
+    fidelity adaptation (barrel-shift exponent scaling, see DESIGN.md).
+    """
+
+    bits: int = 16
+    n_linear: int = cordic.N_LINEAR_STAGES
+    n_hyperbolic: int = cordic.N_HYPERBOLIC_STAGES
+    n_division: int = cordic.N_DIVISION_STAGES
+    range_extend: bool = True
+    rounding: str = "rne"
+
+    @property
+    def fmt(self) -> FxpFormat:
+        return fxp.format_for_bits(self.bits)
+
+
+DEFAULT_POLICY = CordicPolicy()
+PAPER_FAITHFUL_POLICY = CordicPolicy(bits=8, range_extend=False)
+
+
+# ---------------------------------------------------------------------------
+# Raw (non-differentiable) CORDIC forward implementations
+# ---------------------------------------------------------------------------
+
+def _tanh_fwd(x: Array, p: CordicPolicy) -> Array:
+    # tanh(a) = sinh(a)/cosh(a); for |a| beyond the hyperbolic range use
+    # tanh(a) = (e^{2a}-1)/(e^{2a}+1) with the range-extended exp, computed
+    # on the always-negative branch a = -|x| so e^{2a} stays in (0, 1].
+    fmt = p.fmt
+    if p.range_extend:
+        e2a = cordic.exp_fxp(-2.0 * jnp.abs(x), fmt, p.n_hyperbolic, True)
+        t_neg = cordic.divide(e2a - 1.0, e2a + 1.0, fmt,
+                              max(p.n_division, fmt.frac_bits))
+        return jnp.where(x >= 0, -t_neg, t_neg)
+    c, s = cordic.cosh_sinh(x, fmt, p.n_hyperbolic)
+    return cordic.divide(s, c, fmt, max(p.n_division, fmt.frac_bits))
+
+
+def _sigmoid_fwd(x: Array, p: CordicPolicy) -> Array:
+    # Paper eq (1c): sigmoid = 1/(1+e^-x) — hyperbolic stage then division
+    # stage.  e^{-|x|} <= 1 keeps every intermediate in range; the positive
+    # branch uses sigmoid(x) = 1 - sigmoid(-x).
+    fmt = p.fmt
+    e = cordic.exp_fxp(-jnp.abs(x), fmt, p.n_hyperbolic, p.range_extend)
+    s = cordic.divide(jnp.ones_like(e), 1.0 + e, fmt,
+                      max(p.n_division, fmt.frac_bits))
+    return jnp.where(x >= 0, s, 1.0 - s)
+
+
+def _exp_fwd(x: Array, p: CordicPolicy) -> Array:
+    return cordic.exp_fxp(x, p.fmt, p.n_hyperbolic, p.range_extend)
+
+
+def _softmax_fwd(x: Array, p: CordicPolicy, axis: int = -1) -> Array:
+    # RPE flow: exponentials stream through the hyperbolic stage into the
+    # FIFO while the running sum accumulates, then the division stage
+    # normalises each entry (Section 2.3).  Max-subtraction keeps e^a in
+    # (0, 1] so the fixed-point FIFO cannot overflow; the divider runs at
+    # guarded precision (the paper's 2N+K overhead bits) with zero-skip
+    # gating for underflowed exponentials.
+    fmt = p.fmt
+    m = jax.lax.stop_gradient(jnp.max(x, axis=axis, keepdims=True))
+    e = cordic.exp_fxp(x - m, fmt, p.n_hyperbolic, p.range_extend)
+    e = fxp.roundtrip(e, fmt)  # the FIFO stores fmt-width words
+    tot = jnp.sum(e, axis=axis, keepdims=True)
+    gfmt = dataclasses.replace(
+        fmt, total_bits=min(fmt.total_bits + 8, 32),
+        frac_bits=min(fmt.frac_bits + 4, 20))
+    # Normalise the denominator into [1, 2) with a barrel shift so the
+    # divider converges: q = (e >> k) / (tot >> k).
+    k = jnp.ceil(jnp.log2(jnp.maximum(tot, 1e-30)))
+    scale = jnp.exp2(k)
+    q = cordic.divide(e / scale, tot / scale, gfmt,
+                      max(p.n_division, gfmt.frac_bits))
+    return jnp.where(e == 0.0, 0.0, q)
+
+
+def _gelu_fwd(x: Array, p: CordicPolicy) -> Array:
+    # tanh-form GeLU; the two extra multiplies run on the linear stage.
+    fmt = p.fmt
+    x_q = fxp.roundtrip(x, fmt, p.rounding)
+    inner = _GELU_C * (x_q + 0.044715 * x_q * x_q * x_q)
+    t = _tanh_fwd(inner, p)
+    return 0.5 * x_q * (1.0 + t)
+
+
+def _selu_fwd(x: Array, p: CordicPolicy) -> Array:
+    e = cordic.exp_fxp(jnp.minimum(x, 0.0), p.fmt, p.n_hyperbolic, p.range_extend)
+    neg = _SELU_ALPHA * (e - 1.0)
+    return _SELU_LAMBDA * jnp.where(x > 0, fxp.roundtrip(x, p.fmt), neg)
+
+
+def _swish_fwd(x: Array, p: CordicPolicy) -> Array:
+    return fxp.roundtrip(x, p.fmt) * _sigmoid_fwd(x, p)
+
+
+def _relu_fwd(x: Array, p: CordicPolicy) -> Array:
+    # Single-cycle bypass (FSM case 3): just the sign mux + quantizer.
+    return jnp.maximum(fxp.roundtrip(x, p.fmt, p.rounding), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Straight-through wrappers
+# ---------------------------------------------------------------------------
+
+def _ste(fwd_fn, exact_fn):
+    @jax.custom_vjp
+    def f(x):
+        return fwd_fn(x)
+
+    def f_fwd(x):
+        return fwd_fn(x), x
+
+    def f_bwd(x, g):
+        out, vjp = jax.vjp(exact_fn, x)
+        return vjp(g.astype(out.dtype))
+
+    f.defvjp(f_fwd, f_bwd)
+    return f
+
+
+def _exact(name: str, axis: int = -1):
+    return {
+        "relu": jax.nn.relu,
+        "tanh": jnp.tanh,
+        "sigmoid": jax.nn.sigmoid,
+        "softmax": partial(jax.nn.softmax, axis=axis),
+        "gelu": partial(jax.nn.gelu, approximate=True),
+        "selu": jax.nn.selu,
+        "swish": jax.nn.silu,
+        "silu": jax.nn.silu,
+        "exp": jnp.exp,
+        "identity": lambda x: x,
+    }[name]
+
+
+def activate(x: Array, name: str, policy: Optional[CordicPolicy] = None,
+             axis: int = -1) -> Array:
+    """Apply activation ``name``.
+
+    ``policy=None`` selects the exact float implementation (the bf16
+    baseline); otherwise the bit-accurate CORDIC forward with STE gradients.
+    """
+    if name not in SUPPORTED_AFS:
+        raise ValueError(f"unsupported AF {name!r}; choose from {SUPPORTED_AFS}")
+    if policy is None:
+        return _exact(name, axis)(x)
+    p = policy
+    fwd = {
+        "relu": partial(_relu_fwd, p=p),
+        "tanh": partial(_tanh_fwd, p=p),
+        "sigmoid": partial(_sigmoid_fwd, p=p),
+        "softmax": partial(_softmax_fwd, p=p, axis=axis),
+        "gelu": partial(_gelu_fwd, p=p),
+        "selu": partial(_selu_fwd, p=p),
+        "swish": partial(_swish_fwd, p=p),
+        "silu": partial(_swish_fwd, p=p),
+        "exp": partial(_exp_fwd, p=p),
+        "identity": lambda x: fxp.roundtrip(x, p.fmt, p.rounding),
+    }[name]
+    return _ste(fwd, _exact(name, axis))(x)
+
+
+def reuse_report() -> dict:
+    """Which RPE stage each AF exercises (the paper's reuse-factor table)."""
+    hyp = {"tanh", "sigmoid", "softmax", "gelu", "selu", "swish", "silu", "exp"}
+    div = {"tanh", "sigmoid", "softmax", "gelu", "swish", "silu"}
+    afs = [a for a in SUPPORTED_AFS if a not in ("identity",)]
+    return {
+        "hyperbolic_reuse": len(hyp & set(afs)) / len(afs),
+        "division_reuse": len(div & set(afs)) / len(afs),
+        "afs": afs,
+    }

@@ -1,0 +1,190 @@
+"""CAESAR — Configurable and Adaptive Execution Scheduler (paper §3.2-3.3).
+
+Three responsibilities, mirrored from the paper's control engine:
+
+1. **Workload scheduling**: map a network's layer list onto the SYCore
+   array, applying the quantization/pruning co-design discounts, and emit
+   the per-layer cycle/utilization/time/power table (reproduces Table 3).
+
+2. **Adaptive tiling for the TPU path**: choose Pallas block shapes that
+   fit the VMEM budget with MXU-aligned (multiple-of-128) dims — the
+   TPU-native analogue of choosing SYCore sub-block allocations.
+
+3. **Precision/pruning policy book-keeping** for each layer (which the
+   model layers consume via ``CordicPolicy``/``QuantPolicy``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core.pruning import PruningPolicy
+from repro.core.quantization import QuantPolicy
+from repro.core.sycore import (LayerMapping, SYCoreConfig, map_conv, map_fc,
+                               map_gemm)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One schedulable layer.  kind: conv | fc | gemm | pool."""
+
+    name: str
+    kind: str
+    # conv: (k, c_in, c_out, h, w); fc: (d_in, d_out); gemm: (m, k, n)
+    dims: Tuple[int, ...]
+
+    @property
+    def macs(self) -> int:
+        if self.kind == "conv":
+            k, ci, co, h, w = self.dims
+            return k * k * ci * co * h * w
+        if self.kind == "fc":
+            di, do = self.dims
+            return di * do
+        if self.kind == "gemm":
+            m, k, n = self.dims
+            return m * k * n
+        return 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    layers: Tuple[LayerMapping, ...]
+    total_time_us: float
+    total_energy_mj: float
+    mean_utilization: float
+
+    @property
+    def frames_per_joule(self) -> float:
+        return 1e3 / self.total_energy_mj if self.total_energy_mj else 0.0
+
+    def csv(self) -> str:
+        hdr = "layer,macs,mapped,op_cycles,util_pct,time_us,power_mw"
+        return "\n".join([hdr] + [l.row() for l in self.layers])
+
+
+class Caesar:
+    """The control engine: owns array config + co-design policies."""
+
+    def __init__(self, array: SYCoreConfig = SYCoreConfig(),
+                 pruning: Optional[PruningPolicy] = PruningPolicy(rate=0.40),
+                 quant: Optional[QuantPolicy] = QuantPolicy(bits=8)):
+        self.array = array
+        self.pruning = pruning
+        self.quant = quant
+
+    @property
+    def density(self) -> float:
+        return self.pruning.effective_density if self.pruning else 1.0
+
+    def schedule(self, layers: Sequence[LayerSpec]) -> Schedule:
+        mapped: List[LayerMapping] = []
+        for spec in layers:
+            if spec.kind == "conv":
+                k, ci, co, h, w = spec.dims
+                mapped.append(map_conv(self.array, spec.name, k, ci, co, h, w,
+                                       self.density))
+            elif spec.kind == "fc":
+                di, do = spec.dims
+                mapped.append(map_fc(self.array, spec.name, di, do,
+                                     self.density))
+            elif spec.kind == "gemm":
+                m, k, n = spec.dims
+                mapped.append(map_gemm(self.array, spec.name, m, k, n,
+                                       self.density))
+            elif spec.kind == "pool":
+                continue  # pooling runs on the RISC-V host (paper §3.3)
+            else:
+                raise ValueError(f"unknown layer kind {spec.kind!r}")
+        total_t = sum(l.exec_time_us for l in mapped)
+        energy_mj = sum(l.exec_time_us * 1e-6 * l.power_mw for l in mapped)
+        util = (sum(l.utilization for l in mapped) / len(mapped)) if mapped else 0.0
+        return Schedule(tuple(mapped), total_t, energy_mj, util)
+
+
+# ---------------------------------------------------------------------------
+# Reference workloads
+# ---------------------------------------------------------------------------
+
+def vgg16_cifar100() -> List[LayerSpec]:
+    """The paper's Table 3 workload (VGG-16 on 32x32 CIFAR-100 inputs)."""
+    cfg = [
+        ("C1_1", 3, 3, 64, 32, 32), ("C1_2", 3, 64, 64, 32, 32),
+        ("C2_1", 3, 64, 128, 16, 16), ("C2_2", 3, 128, 128, 16, 16),
+        ("C3_1", 3, 128, 256, 8, 8), ("C3_2", 3, 256, 256, 8, 8),
+        ("C3_3", 3, 256, 256, 8, 8),
+        ("C4_1", 3, 256, 512, 4, 4), ("C4_2", 3, 512, 512, 4, 4),
+        ("C4_3", 3, 512, 512, 4, 4),
+        ("C5_1", 3, 512, 512, 2, 2), ("C5_2", 3, 512, 512, 2, 2),
+        ("C5_3", 3, 512, 512, 2, 2),
+    ]
+    layers = [LayerSpec(n, "conv", (k, ci, co, h, w)) for n, k, ci, co, h, w in cfg]
+    layers += [LayerSpec("FC6", "fc", (512, 4096)),
+               LayerSpec("FC7", "fc", (4096, 4096)),
+               LayerSpec("FC8", "fc", (4096, 100))]
+    return layers
+
+
+def transformer_block_specs(name: str, seq: int, d_model: int, n_heads: int,
+                            d_ff: int, n_kv_heads: Optional[int] = None
+                            ) -> List[LayerSpec]:
+    """Decompose one transformer block into SYCore GEMMs (paper Fig 1b)."""
+    n_kv = n_kv_heads or n_heads
+    d_head = d_model // n_heads
+    return [
+        LayerSpec(f"{name}.q", "gemm", (seq, d_model, d_model)),
+        LayerSpec(f"{name}.kv", "gemm", (seq, d_model, 2 * n_kv * d_head)),
+        LayerSpec(f"{name}.scores", "gemm", (seq, d_head, seq)),
+        LayerSpec(f"{name}.ctx", "gemm", (seq, seq, d_head)),
+        LayerSpec(f"{name}.o", "gemm", (seq, d_model, d_model)),
+        LayerSpec(f"{name}.ffn_in", "gemm", (seq, d_model, d_ff)),
+        LayerSpec(f"{name}.ffn_out", "gemm", (seq, d_ff, d_model)),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Adaptive tiling for the TPU execution path
+# ---------------------------------------------------------------------------
+
+VMEM_BYTES = 16 * 1024 * 1024          # v5e VMEM per core
+MXU_ALIGN = 128                         # MXU systolic dimension
+
+
+def pick_block_shape(m: int, n: int, k: int, bytes_per_el: int = 2,
+                     vmem_budget: float = 0.60,
+                     max_block: int = 512) -> Tuple[int, int, int]:
+    """Choose (bm, bn, bk) for an output-stationary Pallas matmul.
+
+    Constraints (the CAESAR sub-block allocation problem, restated for VMEM):
+      * all dims multiples of 128 (MXU-aligned) unless the problem is smaller,
+      * x-tile + w-tile + out-tile (+int32 acc) fit in ``vmem_budget*VMEM``,
+      * prefer large bk (amortise the output-stationary accumulate loop),
+        then square-ish bm/bn (maximise reuse per byte streamed).
+    """
+    def align(v: int) -> int:
+        if v >= MXU_ALIGN:
+            return (v // MXU_ALIGN) * MXU_ALIGN
+        # small problems: round up to the sublane tile (8) at least
+        return max(8, 1 << (v - 1).bit_length())
+
+    budget = VMEM_BYTES * vmem_budget
+    bm = min(align(m), max_block)
+    bn = min(align(n), max_block)
+    bk = min(align(k), max_block)
+
+    def footprint(bm, bn, bk):
+        return (bm * bk + bk * bn) * bytes_per_el + bm * bn * 4
+
+    # shrink in the order bk -> bm -> bn until we fit
+    order = ["bk", "bm", "bn"]
+    vals = {"bm": bm, "bn": bn, "bk": bk}
+    idx = 0
+    while footprint(vals["bm"], vals["bn"], vals["bk"]) > budget:
+        key = order[idx % 3]
+        if vals[key] > MXU_ALIGN:
+            vals[key] //= 2
+        idx += 1
+        if idx > 64:
+            break
+    return vals["bm"], vals["bn"], vals["bk"]

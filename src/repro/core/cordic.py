@@ -1,0 +1,373 @@
+"""CORDIC compute modes (Table 2 of the paper), bit-accurate in JAX.
+
+Implements the three RPE datapaths on raw int32 fixed-point words:
+
+  * linear rotation    — shift-add multiply-accumulate (the MAC stage),
+  * hyperbolic rotation — sinh/cosh (=> exp, tanh, sigmoid, GeLU, ...),
+  * linear vectoring   — iterative division (softmax / sigmoid denominators).
+
+Every function mirrors what the 5+2-stage RPE does in hardware: arithmetic
+shifts, adds/subs driven by a sign bit, and pre-baked angle constants
+(``E_i = 2^-i`` for the linear stage, ``atanh(2^-i)`` for the hyperbolic
+stage).  The Pallas kernels in :mod:`repro.kernels` re-implement the same
+recurrences on VMEM tiles and are validated bit-exactly against this module.
+
+Iteration defaults follow the paper's Pareto conclusion: 5 pipelined linear
+stages, 5 hyperbolic micro-iterations and 4 division micro-iterations
+("nine clock cycles — five for hyperbolic functions and four for division").
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fixed_point as fxp
+from repro.core.fixed_point import FxpFormat
+
+Array = jax.Array
+
+# Paper's Pareto-optimal stage counts (Section 2.2.2).
+N_LINEAR_STAGES = 5
+N_HYPERBOLIC_STAGES = 5
+N_DIVISION_STAGES = 4
+
+LN2 = math.log(2.0)
+
+
+# ---------------------------------------------------------------------------
+# Iteration schedules and gain constants
+# ---------------------------------------------------------------------------
+
+def hyperbolic_sequence(n: int) -> Tuple[int, ...]:
+    """Shift schedule for hyperbolic CORDIC: 1,2,3,4,4,5,... (repeat 4,13,40).
+
+    The repeats are required for convergence of the hyperbolic recurrence
+    (standard Walther result); hardware bakes this into the stage wiring.
+    """
+    seq = []
+    i = 1
+    repeat_at = {4, 13, 40}
+    while len(seq) < n:
+        seq.append(i)
+        if i in repeat_at and len(seq) < n:
+            seq.append(i)
+        i += 1
+    return tuple(seq[:n])
+
+
+@functools.lru_cache(maxsize=None)
+def hyperbolic_gain(n: int) -> float:
+    """K_h = prod sqrt(1 - 2^-2i) over the shift schedule (~0.8282 as n->inf)."""
+    k = 1.0
+    for i in hyperbolic_sequence(n):
+        k *= math.sqrt(1.0 - 2.0 ** (-2 * i))
+    return k
+
+
+def hyperbolic_range(n: int) -> float:
+    """Max |z| for which hyperbolic rotation converges (~1.1182)."""
+    return sum(math.atanh(2.0 ** (-i)) for i in hyperbolic_sequence(n))
+
+
+# ---------------------------------------------------------------------------
+# Linear rotation mode: y <- y0 + x0 * z0  (the MAC datapath)
+# ---------------------------------------------------------------------------
+
+def linear_rotate_raw(x: Array, y: Array, z: Array, fmt: FxpFormat,
+                      n: int = N_LINEAR_STAGES, unroll: bool = True
+                      ) -> Tuple[Array, Array]:
+    """Raw-int linear CORDIC rotation.
+
+    Computes ``y + x * z`` where ``z`` is interpreted in ``fmt`` and must be
+    inside the convergence range |z| < 2.  ``x``/``y`` may live in any common
+    scale; the result keeps that scale.  Returns ``(y_n, z_residual)``.
+
+    ``unroll=True`` mirrors the paper's 5-stage *pipelined* MAC (each stage
+    has its own hard-wired ``2^-i``); ``unroll=False`` is the *iterative*
+    area-saving variant (single stage re-used, Section 2.2.1).
+    """
+    x = x.astype(jnp.int32)
+    y = y.astype(jnp.int32)
+    z = z.astype(jnp.int32)
+
+    # E_i = 2^-i in fmt; underflows to 0 once i > frac_bits, exactly as the
+    # hardware constant would.
+    e_tbl = [fxp.constant(2.0 ** (-i), fmt) for i in range(n)]
+
+    if unroll:
+        yi, zi = y, z
+        for i in range(n):
+            delta = jnp.where(zi >= 0, jnp.int32(1), jnp.int32(-1))
+            yi = yi + delta * fxp.ashr(x, i)
+            zi = zi - delta * jnp.int32(e_tbl[i])
+        return yi, zi
+
+    e_arr = jnp.asarray(e_tbl, jnp.int32)
+
+    def body(i, carry):
+        yi, zi = carry
+        delta = jnp.where(zi >= 0, jnp.int32(1), jnp.int32(-1))
+        yi = yi + delta * jnp.right_shift(x, i)
+        zi = zi - delta * e_arr[i]
+        return yi, zi
+
+    return jax.lax.fori_loop(0, n, body, (y, z))
+
+
+def mac(x: Array, w: Array, acc: Array, fmt: FxpFormat,
+        n: int = N_LINEAR_STAGES, rounding: str = "rne") -> Array:
+    """Real-valued CORDIC MAC: ``acc + x*w`` with the RPE's 5-stage multiply.
+
+    ``w`` plays the CORDIC ``z`` role and must satisfy |w| < 2 after
+    quantization (CAESAR's per-tensor scaling guarantees this for weights).
+    """
+    x_raw = fxp.quantize(x, fmt, rounding)
+    w_raw = fxp.quantize(w, fmt, rounding)
+    acc_raw = fxp.quantize(acc, fmt, rounding)
+    y_raw, _ = linear_rotate_raw(x_raw, acc_raw, w_raw, fmt, n)
+    return fxp.dequantize(y_raw, fmt)
+
+
+def multiply(x: Array, w: Array, fmt: FxpFormat, n: int = N_LINEAR_STAGES) -> Array:
+    return mac(x, w, jnp.zeros_like(jnp.asarray(x, jnp.float32)), fmt, n)
+
+
+# ---------------------------------------------------------------------------
+# Hyperbolic rotation mode: (cosh z, sinh z)
+# ---------------------------------------------------------------------------
+
+def hyperbolic_rotate_raw(z: Array, fmt: FxpFormat,
+                          n: int = N_HYPERBOLIC_STAGES,
+                          unroll: bool = False) -> Tuple[Array, Array]:
+    """Raw-int hyperbolic rotation. |z| (in fmt) must be < hyperbolic_range(n).
+
+    Seeds x0 = 1/K_h so the gain is pre-compensated (free in hardware: it is
+    just the reset constant of the x register).  Returns (cosh_raw, sinh_raw).
+    """
+    z = z.astype(jnp.int32)
+    inv_gain = fxp.constant(1.0 / hyperbolic_gain(n), fmt)
+    x = jnp.full_like(z, inv_gain)
+    y = jnp.zeros_like(z)
+    seq = hyperbolic_sequence(n)
+
+    def stage(shift: int, carry):
+        xi, yi, zi = carry
+        delta = jnp.where(zi >= 0, jnp.int32(1), jnp.int32(-1))
+        e_i = jnp.int32(fxp.constant(math.atanh(2.0 ** (-shift)), fmt))
+        x_new = xi + delta * fxp.ashr(yi, shift)
+        y_new = yi + delta * fxp.ashr(xi, shift)
+        z_new = zi - delta * e_i
+        return x_new, y_new, z_new
+
+    carry = (x, y, z)
+    if unroll:
+        for s in seq:
+            carry = stage(s, carry)
+    else:
+        shifts = jnp.asarray(seq, jnp.int32)
+
+        def body(i, c):
+            xi, yi, zi = c
+            shift = shifts[i]
+            delta = jnp.where(zi >= 0, jnp.int32(1), jnp.int32(-1))
+            atanh_tbl = jnp.asarray(
+                [fxp.constant(math.atanh(2.0 ** (-s)), fmt) for s in seq], jnp.int32)
+            e_i = atanh_tbl[i]
+            return (xi + delta * fxp.ashr(yi, shift),
+                    yi + delta * fxp.ashr(xi, shift),
+                    zi - delta * e_i)
+
+        carry = jax.lax.fori_loop(0, n, body, carry)
+    xo, yo, _ = carry
+    return xo, yo
+
+
+def cosh_sinh(a: Array, fmt: FxpFormat, n: int = N_HYPERBOLIC_STAGES
+              ) -> Tuple[Array, Array]:
+    """Real-valued cosh/sinh with input clamped to the convergence range."""
+    rng = hyperbolic_range(n)
+    a_raw = fxp.quantize(jnp.clip(a, -rng, rng), fmt)
+    c_raw, s_raw = hyperbolic_rotate_raw(a_raw, fmt, n)
+    return fxp.dequantize(c_raw, fmt), fxp.dequantize(s_raw, fmt)
+
+
+def exp_fxp(a: Array, fmt: FxpFormat, n: int = N_HYPERBOLIC_STAGES,
+            range_extend: bool = True) -> Array:
+    """e^a via cosh+sinh.
+
+    ``range_extend=True`` applies a = k*ln2 + r and shifts the result by k —
+    a barrel shift in hardware.  The paper's RPE assumes bounded AF inputs
+    (|a| <= ~1.1); we extend the range for fidelity at LLM scales and note
+    the adaptation in DESIGN.md.  With ``range_extend=False`` inputs are
+    clamped to the native convergence range (paper-faithful behaviour).
+    """
+    a = jnp.asarray(a, jnp.float32)
+    if not range_extend:
+        c, s = cosh_sinh(a, fmt, n)
+        return c + s
+    k = jnp.round(a / LN2)
+    r = a - k * LN2
+    c, s = cosh_sinh(r, fmt, n)
+    e_r = c + s
+    # ldexp == barrel shift of the raw word.
+    return e_r * jnp.exp2(k)
+
+
+# ---------------------------------------------------------------------------
+# Linear vectoring mode: z <- z0 + y0/x0  (the division datapath)
+# ---------------------------------------------------------------------------
+
+def divide_raw(y: Array, x: Array, fmt: FxpFormat,
+               n: int = N_DIVISION_STAGES, extra_start: int = 0
+               ) -> Array:
+    """Raw-int quotient y/x (both in a common scale), result in ``fmt``.
+
+    Convergence requires |y/x| < 2^(1+extra_start); iterations run
+    i = -extra_start .. n-1.  x must be > 0 (callers normalise the sign).
+    """
+    y = y.astype(jnp.int32)
+    x = x.astype(jnp.int32)
+    q = jnp.zeros_like(y)
+
+    def shl_or_shr(v, i):
+        if i >= 0:
+            return fxp.ashr(v, i)
+        return jnp.left_shift(v, -i)
+
+    for i in range(-extra_start, n):
+        delta = jnp.where(y >= 0, jnp.int32(1), jnp.int32(-1))
+        e_i = jnp.int32(fxp.constant(2.0 ** (-i), fmt))
+        y = y - delta * shl_or_shr(x, i)
+        q = q + delta * e_i
+    return q
+
+
+def divide(num: Array, den: Array, fmt: FxpFormat,
+           n: int = N_DIVISION_STAGES, extra_start: int = 0) -> Array:
+    """Real-valued CORDIC division with sign normalisation."""
+    num = jnp.asarray(num, jnp.float32)
+    den = jnp.asarray(den, jnp.float32)
+    sign = jnp.sign(den)
+    sign = jnp.where(sign == 0, 1.0, sign)
+    num_raw = fxp.quantize(num * sign, fmt)
+    den_raw = fxp.quantize(jnp.abs(den), fmt)
+    q_raw = divide_raw(num_raw, den_raw, fmt, n, extra_start)
+    return fxp.dequantize(q_raw, fmt)
+
+
+# ---------------------------------------------------------------------------
+# Circular mode (sin/cos) — completes the "CORDIC is all you need" triad.
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def circular_gain(n: int) -> float:
+    k = 1.0
+    for i in range(n):
+        k *= math.sqrt(1.0 + 2.0 ** (-2 * i))
+    return k
+
+
+def cos_sin(a: Array, fmt: FxpFormat, n: int = N_HYPERBOLIC_STAGES
+            ) -> Tuple[Array, Array]:
+    """cos/sin via circular rotation mode, |a| <= ~1.74 rad native range."""
+    a_raw = fxp.quantize(a, fmt).astype(jnp.int32)
+    inv_gain = fxp.constant(1.0 / circular_gain(n), fmt)
+    x = jnp.full_like(a_raw, inv_gain)
+    y = jnp.zeros_like(a_raw)
+    z = a_raw
+    for i in range(n):
+        delta = jnp.where(z >= 0, jnp.int32(1), jnp.int32(-1))
+        e_i = jnp.int32(fxp.constant(math.atan(2.0 ** (-i)), fmt))
+        x, y, z = (x - delta * fxp.ashr(y, i),
+                   y + delta * fxp.ashr(x, i),
+                   z - delta * e_i)
+    return fxp.dequantize(x, fmt), fxp.dequantize(y, fmt)
+
+
+# ---------------------------------------------------------------------------
+# Hyperbolic vectoring mode: sqrt (the paper's "square roots and more", §1)
+# ---------------------------------------------------------------------------
+
+def sqrt_fxp(a: Array, fmt: FxpFormat, n: int = N_HYPERBOLIC_STAGES,
+             range_extend: bool = True) -> Array:
+    """sqrt(a) via hyperbolic vectoring of (a + 1/4, a - 1/4).
+
+    Driving y -> 0 leaves x_n = K_h * sqrt(x0^2 - y0^2) = K_h * sqrt(a).
+    Native convergence needs a in ~[0.03, 2); ``range_extend`` normalises
+    a = m * 4^e with m in [0.25, 1) and barrel-shifts the result by e
+    (exactly the paper's adaptive fixed-point scaling).
+    """
+    a = jnp.asarray(a, jnp.float32)
+    a = jnp.maximum(a, 0.0)
+    if range_extend:
+        # a = m * 2^(2e); frexp-style normalisation to [0.25, 1)
+        e2 = jnp.ceil(jnp.log2(jnp.maximum(a, 1e-30)) / 2.0)
+        m = a / jnp.exp2(2.0 * e2)
+        root_m = sqrt_fxp(m, fmt, n, range_extend=False)
+        return jnp.where(a == 0.0, 0.0, root_m * jnp.exp2(e2))
+
+    # guard bits against per-stage truncation bias (the paper's 2N+K
+    # internal precision, as in the AF kernels)
+    import dataclasses as _dc
+    gfmt = _dc.replace(fmt, total_bits=min(fmt.total_bits + 12, 32),
+                       frac_bits=min(fmt.frac_bits + 10, 24))
+    x = fxp.quantize(a + 0.25, gfmt).astype(jnp.int32)
+    y = fxp.quantize(a - 0.25, gfmt).astype(jnp.int32)
+    seq = hyperbolic_sequence(n)
+    for shift in seq:
+        delta = jnp.where(y < 0, jnp.int32(1), jnp.int32(-1))
+        x, y = (x + delta * fxp.ashr(y, shift),
+                y + delta * fxp.ashr(x, shift))
+    inv_gain = 1.0 / hyperbolic_gain(n)
+    return fxp.dequantize(x, gfmt) * inv_gain
+
+
+def rsqrt_fxp(a: Array, fmt: FxpFormat, n: int = N_HYPERBOLIC_STAGES,
+              n_div: int = N_DIVISION_STAGES) -> Array:
+    """1/sqrt(a): sqrt on the hyperbolic stage, then the division stage —
+    the full RMSNorm denominator on the RPE datapath."""
+    root = sqrt_fxp(a, fmt, n)
+    # normalise the denominator to m in (0.5, 1] so the quotient 1/m stays
+    # in the divider's [1, 2) range; undo with a barrel shift
+    k = jnp.ceil(jnp.log2(jnp.maximum(root, 1e-30)))
+    m = root * jnp.exp2(-k)
+    inv_m = divide(jnp.ones_like(m), m, fmt, max(n_div, fmt.frac_bits))
+    return inv_m * jnp.exp2(-k)
+
+
+def ln_fxp(a: Array, fmt: FxpFormat, n: int = N_HYPERBOLIC_STAGES,
+           range_extend: bool = True) -> Array:
+    """ln(a) = 2*atanh((a-1)/(a+1)) via hyperbolic *vectoring* of
+    (a+1, a-1): driving y -> 0 accumulates z = atanh(y0/x0).
+
+    Native convergence needs a in ~[0.2, 5); ``range_extend`` uses
+    a = m * 2^k => ln(a) = ln(m) + k*ln2 (barrel shift + one constant MAC,
+    both RPE-native).  Completes the paper's "trigonometric, hyperbolic,
+    and logarithmic functions" claim (§1).
+    """
+    a = jnp.asarray(a, jnp.float32)
+    a = jnp.maximum(a, 1e-30)
+    if range_extend:
+        k = jnp.round(jnp.log2(a))
+        m = a / jnp.exp2(k)          # in [~0.7, ~1.41]
+        return ln_fxp(m, fmt, n, range_extend=False) + k * LN2
+
+    import dataclasses as _dc
+    gfmt = _dc.replace(fmt, total_bits=min(fmt.total_bits + 12, 32),
+                       frac_bits=min(fmt.frac_bits + 10, 24))
+    x = fxp.quantize(a + 1.0, gfmt).astype(jnp.int32)
+    y = fxp.quantize(a - 1.0, gfmt).astype(jnp.int32)
+    z = jnp.zeros_like(x)
+    for shift in hyperbolic_sequence(n):
+        e_i = jnp.int32(fxp.constant_raw(math.atanh(2.0 ** (-shift)),
+                                         gfmt.frac_bits))
+        delta = jnp.where(y < 0, jnp.int32(1), jnp.int32(-1))
+        x, y, z = (x + delta * fxp.ashr(y, shift),
+                   y + delta * fxp.ashr(x, shift),
+                   z - delta * e_i)
+    return 2.0 * fxp.dequantize(z, gfmt)

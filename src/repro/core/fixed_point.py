@@ -1,0 +1,125 @@
+"""Fixed-point (FxP) arithmetic substrate for CORDIC emulation.
+
+The paper's RPE operates on adaptive fixed-point data ("FxP8/16/32"):
+a signed two's-complement integer with a static binary point.  We model a
+value v as   v = raw * 2**-frac_bits   with raw stored in int32 (the
+hardware accumulator width; the paper notes MAC output precision grows as
+2N+K).  All CORDIC iterations below run on the raw integers with
+arithmetic shifts, exactly as the shift-add hardware would, so the JAX
+reference and the Pallas kernels are bit-exact replicas of each other.
+
+Rounding modes follow the paper's Section 1.1 (truncation vs
+round-to-nearest-even).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class FxpFormat:
+    """Q-format descriptor: ``total_bits`` wide, ``frac_bits`` fractional."""
+
+    total_bits: int
+    frac_bits: int
+    signed: bool = True
+
+    def __post_init__(self):
+        if self.total_bits > 32:
+            raise ValueError("raw storage is int32; total_bits must be <= 32")
+        if self.frac_bits >= self.total_bits:
+            raise ValueError("frac_bits must leave at least one integer bit")
+
+    @property
+    def int_bits(self) -> int:
+        return self.total_bits - self.frac_bits - (1 if self.signed else 0)
+
+    @property
+    def scale(self) -> float:
+        return float(2 ** self.frac_bits)
+
+    @property
+    def resolution(self) -> float:
+        return float(2.0 ** (-self.frac_bits))
+
+    @property
+    def raw_max(self) -> int:
+        return (1 << (self.total_bits - 1)) - 1 if self.signed else (1 << self.total_bits) - 1
+
+    @property
+    def raw_min(self) -> int:
+        return -(1 << (self.total_bits - 1)) if self.signed else 0
+
+    @property
+    def max_value(self) -> float:
+        return self.raw_max * self.resolution
+
+    @property
+    def min_value(self) -> float:
+        return self.raw_min * self.resolution
+
+    def with_frac(self, frac_bits: int) -> "FxpFormat":
+        return dataclasses.replace(self, frac_bits=frac_bits)
+
+
+# The paper's three evaluated precisions (Figs 4-6 sweep 4/8/16/32 bits).
+FXP4 = FxpFormat(4, 2)
+FXP8 = FxpFormat(8, 4)
+FXP16 = FxpFormat(16, 8)
+FXP32 = FxpFormat(32, 16)
+
+_BY_BITS = {4: FXP4, 8: FXP8, 16: FXP16, 32: FXP32}
+
+
+def format_for_bits(bits: int) -> FxpFormat:
+    return _BY_BITS[bits]
+
+
+def quantize(x: Union[Array, float], fmt: FxpFormat, rounding: str = "rne") -> Array:
+    """Real -> raw int32, saturating.  ``rounding``: 'rne' | 'trunc'."""
+    x = jnp.asarray(x, jnp.float32) * fmt.scale
+    if rounding == "rne":
+        raw = jnp.round(x)  # jnp.round is round-half-to-even
+    elif rounding == "trunc":
+        raw = jnp.floor(x)
+    else:
+        raise ValueError(f"unknown rounding mode {rounding!r}")
+    raw = jnp.clip(raw, fmt.raw_min, fmt.raw_max)
+    return raw.astype(jnp.int32)
+
+
+def dequantize(raw: Array, fmt: FxpFormat) -> Array:
+    return raw.astype(jnp.float32) * fmt.resolution
+
+
+def saturate(raw: Array, fmt: FxpFormat) -> Array:
+    """Clamp a wide accumulator back into the format's representable range."""
+    return jnp.clip(raw, fmt.raw_min, fmt.raw_max).astype(jnp.int32)
+
+
+def ashr(raw: Array, shift) -> Array:
+    """Arithmetic shift right — the hardware's 2**-i (truncation toward -inf)."""
+    return jnp.right_shift(raw, shift)
+
+
+def constant(value: float, fmt: FxpFormat) -> int:
+    """Python-level quantized constant (for angle/LUT tables baked at trace time)."""
+    raw = int(np.round(value * fmt.scale))
+    return int(np.clip(raw, fmt.raw_min, fmt.raw_max))
+
+
+def constant_raw(value: float, frac_bits: int) -> int:
+    """Unclamped constant at an arbitrary internal precision (guard bits)."""
+    return int(np.round(value * 2.0 ** frac_bits))
+
+
+def roundtrip(x: Array, fmt: FxpFormat, rounding: str = "rne") -> Array:
+    """Quantize-dequantize: the value the hardware actually sees."""
+    return dequantize(quantize(x, fmt, rounding), fmt)

@@ -1,0 +1,123 @@
+"""Pareto analysis of CORDIC stage count vs error (paper Figs 4-6, §2.1.3).
+
+Sweeps bit precision (4/8/16/32) x iteration count for each AF and for the
+linear-mode MAC, reporting the paper's four error metrics (eqs 4-7):
+MSE, MAE, average relative error, and STD.  The knee of these curves is what
+justifies the 5+2 RPE configuration.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cordic, fixed_point as fxp
+from repro.core.activations import CordicPolicy, activate
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ParetoPoint:
+    fn: str
+    bits: int
+    iterations: int
+    mse: float
+    mae: float
+    avg_rel_err: float
+    std: float
+
+    def row(self) -> str:
+        return (f"{self.fn},{self.bits},{self.iterations},"
+                f"{self.mse:.3e},{self.mae:.3e},{self.avg_rel_err:.3e},{self.std:.3e}")
+
+
+def error_metrics(y: Array, x: Array) -> Dict[str, float]:
+    """Paper eqs (4)-(7); x = expected (exact), y = fixed-point CORDIC."""
+    y = np.asarray(y, np.float64)
+    x = np.asarray(x, np.float64)
+    diff = y - x
+    denom = np.where(np.abs(x) < 1e-6, 1e-6, np.abs(x))
+    return {
+        "mse": float(np.mean(diff ** 2)),
+        "mae": float(np.mean(np.abs(diff))),
+        "avg_rel_err": float(np.mean(np.abs(diff) / denom)),
+        "std": float(np.sum((x - np.mean(y)) ** 2) / max(x.size - 1, 1)),
+    }
+
+
+def _policy(fn: str, bits: int, iters: int) -> CordicPolicy:
+    return CordicPolicy(bits=bits, n_linear=iters, n_hyperbolic=iters,
+                        n_division=iters, range_extend=True)
+
+
+def sweep_activation(fn: str, bits_list: Sequence[int] = (4, 8, 16, 32),
+                     iterations: Sequence[int] = tuple(range(2, 17)),
+                     n_samples: int = 2048, input_range: float = 4.0,
+                     seed: int = 0) -> List[ParetoPoint]:
+    """Error sweep for one AF across (bits x iterations)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(-input_range, input_range, (n_samples,)),
+                    jnp.float32)
+    if fn == "softmax":
+        x = x.reshape(-1, 16)
+    exact = activate(x, fn, None)
+    out = []
+    for bits in bits_list:
+        for it in iterations:
+            got = activate(x, fn, _policy(fn, bits, it))
+            m = error_metrics(got, exact)
+            out.append(ParetoPoint(fn, bits, it, **m))
+    return out
+
+
+def sweep_mac(bits_list: Sequence[int] = (8, 16, 32),
+              iterations: Sequence[int] = tuple(range(2, 17)),
+              n_samples: int = 4096, seed: int = 0) -> List[ParetoPoint]:
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(-2, 2, (n_samples,)), jnp.float32)
+    w = jnp.asarray(rng.uniform(-1.9, 1.9, (n_samples,)), jnp.float32)
+    b = jnp.asarray(rng.uniform(-1, 1, (n_samples,)), jnp.float32)
+    exact = b + x * w
+    out = []
+    for bits in bits_list:
+        fmt = fxp.format_for_bits(bits)
+        for it in iterations:
+            got = cordic.mac(x, w, b, fmt, n=it)
+            m = error_metrics(got, exact)
+            out.append(ParetoPoint("mac", bits, it, **m))
+    return out
+
+
+def knee(points: List[ParetoPoint], metric: str = "mae",
+         rel_improvement: float = 0.10) -> Dict[int, int]:
+    """Per bit-width: smallest iteration count after which the next
+    iteration improves ``metric`` by less than ``rel_improvement`` — the
+    paper's justification for stopping at 5 stages."""
+    res: Dict[int, int] = {}
+    by_bits: Dict[int, List[ParetoPoint]] = {}
+    for p in points:
+        by_bits.setdefault(p.bits, []).append(p)
+    for bits, ps in by_bits.items():
+        ps = sorted(ps, key=lambda p: p.iterations)
+        chosen = ps[-1].iterations
+        for a, b in zip(ps, ps[1:]):
+            cur = getattr(a, metric)
+            nxt = getattr(b, metric)
+            if cur <= 0 or (cur - nxt) / cur < rel_improvement:
+                chosen = a.iterations
+                break
+        res[bits] = chosen
+    return res
+
+
+def full_report(iterations: Sequence[int] = tuple(range(2, 13)),
+                n_samples: int = 1024) -> Dict[str, List[ParetoPoint]]:
+    report = {}
+    for fn in ("tanh", "sigmoid", "softmax"):
+        report[fn] = sweep_activation(fn, (4, 8, 16, 32), iterations, n_samples)
+    report["mac"] = sweep_mac((8, 16, 32), iterations, n_samples)
+    return report

@@ -1,0 +1,139 @@
+"""Quantized (FxP8) matmul path — the CORDIC MAC at production scale.
+
+Hardware adaptation (see DESIGN.md): the paper's linear-mode CORDIC MAC is
+an n-stage shift-add fixed-point multiplier.  On TPU the MXU already *is* a
+systolic array with a native int8 x int8 -> int32 path, so the faithful
+production mapping of "CORDIC(5) FxP8 MAC" is a symmetric int8 quantized
+matmul whose precision is governed by the same Pareto analysis: 5 linear
+stages resolve ~5 fractional bits, i.e. int8 with a power-of-two scale.
+
+Bit-exact shift-add emulation lives in :mod:`repro.kernels.cordic_mac` and
+is what we validate against; this module provides the scaled-int8 execution
+path used inside the large-model layers, with straight-through gradients for
+quantization-aware training (how the paper recovers pruning/quantization
+accuracy, §4.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    """Per-layer quantization policy scheduled by CAESAR."""
+
+    bits: int = 8
+    per_channel: bool = True        # per-output-channel weight scales
+    pow2_scale: bool = True         # power-of-two scales (pure barrel shift,
+                                    # exactly what the RPE's shifter provides)
+    act_bits: Optional[int] = 8     # None => activations stay bf16 (W8A16)
+
+    @property
+    def qmax(self) -> int:
+        return (1 << (self.bits - 1)) - 1
+
+    @property
+    def act_qmax(self) -> int:
+        assert self.act_bits is not None
+        return (1 << (self.act_bits - 1)) - 1
+
+
+def _round_scale_pow2(scale: Array) -> Array:
+    return jnp.exp2(jnp.ceil(jnp.log2(jnp.maximum(scale, 1e-12))))
+
+
+def quantize_weight(w: Array, policy: QuantPolicy, axis: int = -1
+                    ) -> Tuple[Array, Array]:
+    """Symmetric weight quantization -> (int8 raw, float scale).
+
+    ``axis`` is the output-channel axis kept un-reduced by the matmul.
+    """
+    if policy.per_channel:
+        reduce_axes = tuple(i for i in range(w.ndim) if i != axis % w.ndim)
+        amax = jnp.max(jnp.abs(w), axis=reduce_axes, keepdims=True)
+    else:
+        amax = jnp.max(jnp.abs(w))
+    scale = amax / policy.qmax
+    if policy.pow2_scale:
+        scale = _round_scale_pow2(scale)
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(w / scale), -policy.qmax, policy.qmax)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def quantize_act(x: Array, policy: QuantPolicy) -> Tuple[Array, Array]:
+    """Dynamic per-tensor symmetric activation quantization."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax / policy.act_qmax, 1e-12)
+    if policy.pow2_scale:
+        scale = _round_scale_pow2(scale)
+    q = jnp.clip(jnp.round(x / scale), -policy.act_qmax, policy.act_qmax)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def fake_quant(x: Array, policy: QuantPolicy) -> Array:
+    """STE quantize-dequantize (QAT view of the tensor)."""
+
+    @jax.custom_vjp
+    def f(v):
+        q, s = quantize_act(v, policy)
+        return q.astype(jnp.float32) * s
+
+    def fwd(v):
+        return f(v), None
+
+    def bwd(_, g):
+        return (g,)
+
+    f.defvjp(fwd, bwd)
+    return f(x)
+
+
+def int8_matmul(x_q: Array, w_q: Array, x_scale: Array, w_scale: Array,
+                ) -> Array:
+    """int8 x int8 -> int32 -> rescale.  Hits the MXU int8 path on TPU."""
+    acc = jax.lax.dot_general(
+        x_q, w_q,
+        dimension_numbers=(((x_q.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * x_scale * jnp.squeeze(w_scale)
+
+
+def quantized_dense(x: Array, w: Array, policy: Optional[QuantPolicy]
+                    ) -> Array:
+    """Dense layer with the CORDIC-FxP8 execution path + STE backward.
+
+    policy None  -> plain bf16/f32 matmul (baseline).
+    act_bits None-> weight-only quantization (W8A16).
+    else         -> W8A8 int8 matmul.
+    """
+    if policy is None:
+        return x @ w
+
+    @jax.custom_vjp
+    def f(x_, w_):
+        w_q, w_s = quantize_weight(w_, policy, axis=-1)
+        if policy.act_bits is None:
+            return x_ @ (w_q.astype(x_.dtype) * w_s.astype(x_.dtype))
+        x_q, x_s = quantize_act(x_, policy)
+        return int8_matmul(x_q, w_q, x_s, w_s).astype(x_.dtype)
+
+    def fwd(x_, w_):
+        return f(x_, w_), (x_, w_)
+
+    def bwd(res, g):
+        x_, w_ = res
+        g2 = g.reshape(-1, g.shape[-1])
+        x2 = x_.reshape(-1, x_.shape[-1])
+        dx = (g @ w_.T).reshape(x_.shape)
+        dw = x2.T @ g2
+        return dx.astype(x_.dtype), dw.astype(w_.dtype)
+
+    f.defvjp(fwd, bwd)
+    return f(x, w)

@@ -1,0 +1,84 @@
+"""Reconfigurable Processing Engine (RPE) — the paper's 5+2 CORDIC neuron.
+
+Functional view: one object that exposes the two neuron tasks (MAC and AF)
+through a runtime-selectable CORDIC datapath, plus the cycle-accurate
+throughput model used by the SYCore/CAESAR schedulers and the benchmark
+harness (paper §2.2-2.3).
+
+Cycle model (paper values):
+  * MAC: 5-stage pipeline, initiation interval 1 (one MAC/cycle after a
+    5-cycle fill).
+  * tanh/sigmoid: 9 cycles — 5 hyperbolic + 4 division (§4.3).
+  * SoftMax: 5 hyperbolic cycles per element (FIFO fill, sum accumulates
+    for free) + 4 division cycles per element (§2.3).
+  * ReLU: 1 cycle (FSM case 3 bypass).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core import cordic, fixed_point as fxp
+from repro.core.activations import CordicPolicy, activate
+
+MAC_PIPELINE_DEPTH = 5
+HYPERBOLIC_CYCLES = 5
+DIVISION_CYCLES = 4
+RELU_CYCLES = 1
+# First output of a 32x32 output-stationary pass (paper §3.2): array skew
+# (2*32-1 diagonal waves) abstracted to the paper's quoted figure.
+ARRAY_FILL_CYCLES = 45
+
+
+@dataclasses.dataclass(frozen=True)
+class RPE:
+    """One neuron engine with a fixed policy (the CAESAR per-layer config)."""
+
+    policy: CordicPolicy = CordicPolicy()
+
+    # -- datapath ---------------------------------------------------------
+    def mac(self, x, w, acc):
+        return cordic.mac(x, w, acc, self.policy.fmt, self.policy.n_linear)
+
+    def af(self, x, name: str, axis: int = -1):
+        return activate(x, name, self.policy, axis=axis)
+
+    # -- cycle model ------------------------------------------------------
+    def mac_cycles(self, n_macs: int, pipelined: bool = True) -> int:
+        """Cycles for n back-to-back MACs on one RPE."""
+        if pipelined:
+            return MAC_PIPELINE_DEPTH + max(n_macs - 1, 0)
+        return self.policy.n_linear * n_macs  # iterative variant (§2.2.1)
+
+    def af_cycles(self, name: str, n_elements: int = 1) -> int:
+        if name == "relu":
+            return RELU_CYCLES * n_elements
+        if name == "softmax":
+            return (HYPERBOLIC_CYCLES + DIVISION_CYCLES) * n_elements
+        if name in ("tanh", "sigmoid", "exp", "selu"):
+            return (HYPERBOLIC_CYCLES + DIVISION_CYCLES) * n_elements
+        if name in ("gelu", "swish", "silu"):
+            # hyperbolic + division + extra linear-stage multiply
+            return (HYPERBOLIC_CYCLES + DIVISION_CYCLES + MAC_PIPELINE_DEPTH) * n_elements
+        return n_elements
+
+    def neuron(self, x, w, bias, af: str = "relu"):
+        """Full neuron: dot(x, w) + bias -> AF, all on the CORDIC datapath.
+
+        x: (..., k), w: (k,), bias scalar.  The accumulation loop mirrors the
+        output-stationary PE: partial sums stay put, inputs/weights stream.
+        """
+        fmt = self.policy.fmt
+        acc = jnp.broadcast_to(jnp.asarray(bias, jnp.float32), x.shape[:-1])
+        for k in range(x.shape[-1]):
+            acc = self.mac(x[..., k], w[k], acc)
+        return self.af(acc, af)
+
+
+def throughput_gops(freq_mhz: float, n_rpes: int, pipelined: bool = True,
+                    n_linear: int = cordic.N_LINEAR_STAGES) -> float:
+    """Peak MAC throughput (GOPS, counting 2 ops/MAC) of an RPE array."""
+    macs_per_cycle = 1.0 if pipelined else 1.0 / n_linear
+    return 2.0 * n_rpes * macs_per_cycle * freq_mhz * 1e6 / 1e9

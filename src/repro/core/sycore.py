@@ -1,0 +1,159 @@
+"""SYCore — output-stationary systolic array of RPEs (paper §3).
+
+Two faces:
+
+1. A cycle/energy model of the 32x32 (4x4 sub-blocked) array, reproducing
+   the paper's Table 3 mapping of VGG-16/CIFAR-100 (op cycles, utilization,
+   execution time, power) — consumed by CAESAR and the benchmark harness.
+
+2. A functional JAX emulation of the output-stationary dataflow
+   (``output_stationary_matmul``) that the Pallas kernel mirrors tile-for-
+   tile on TPU; used in tests to pin the dataflow semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.rpe import ARRAY_FILL_CYCLES, MAC_PIPELINE_DEPTH
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SYCoreConfig:
+    rows: int = 32
+    cols: int = 32
+    sub_block: int = 4          # 4x4 RPE sub-blocks, power-gated when idle
+    freq_mhz: float = 100.0     # paper's reference operating point
+    rpe_power_uw: float = 109.8  # Table 5 (28nm, proposed MAC)
+    pipelined: bool = True
+
+    @property
+    def n_rpes(self) -> int:
+        return self.rows * self.cols
+
+    @property
+    def n_sub_blocks(self) -> int:
+        return (self.rows // self.sub_block) * (self.cols // self.sub_block)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerMapping:
+    """One row of the paper's Table 3."""
+
+    name: str
+    macs: int                  # dense MAC count
+    mapped: Tuple[int, int]    # (rows, cols) of the array actually used
+    op_cycles: int
+    utilization: float         # fraction of the 32x32 array active
+    exec_time_us: float
+    power_mw: float
+
+    def row(self) -> str:
+        return (f"{self.name},{self.macs},{self.mapped[0]}x{self.mapped[1]},"
+                f"{self.op_cycles},{100*self.utilization:.1f},"
+                f"{self.exec_time_us:.2f},{self.power_mw:.3f}")
+
+
+def _sub_block_round(n: int, sub: int) -> int:
+    """Active PEs are allocated in sub-block granularity."""
+    return int(math.ceil(n / sub) * sub)
+
+
+def map_conv(cfg: SYCoreConfig, name: str, k: int, c_in: int, c_out: int,
+             h: int, w: int, density: float = 1.0) -> LayerMapping:
+    """Output-stationary conv mapping (paper §3.3).
+
+    Output pixels are pinned to PEs; each PE accumulates its K*K*C_in dot
+    product, swept over C_out.  When the spatial extent H*W is smaller than
+    the array, CAESAR replicates the tile across idle sub-blocks to process
+    multiple output channels in parallel (the Table-3 "Op. cycles" column:
+    e.g. C2_1 runs 73728 K-MACs in 18432 cycles = 4-way replication).
+    """
+    spatial = h * w
+    rows = min(_sub_block_round(min(h, cfg.rows), cfg.sub_block), cfg.rows)
+    cols = min(_sub_block_round(min(w, cfg.cols), cfg.sub_block), cfg.cols)
+    tile_pes = min(spatial, rows * cols)
+    replication = max(1, (cfg.n_rpes // max(tile_pes, 1)))
+    replication = min(replication, c_out)
+    active = tile_pes * replication
+    macs_dense = k * k * c_in * c_out * spatial
+    macs = int(macs_dense * density)
+    # Per-PE sequential MACs: K*K*C_in per output channel, c_out/replication
+    # channel sweeps, spatial tiled over the mapped region.
+    spatial_passes = math.ceil(spatial / tile_pes)
+    op_cycles = int(math.ceil(k * k * c_in * density)
+                    * math.ceil(c_out / replication) * spatial_passes)
+    total_cycles = op_cycles + ARRAY_FILL_CYCLES
+    t_us = total_cycles / cfg.freq_mhz
+    power_mw = active * cfg.rpe_power_uw * 1e-3
+    return LayerMapping(name, macs, (min(h, rows), min(w, cols)), op_cycles,
+                        active / cfg.n_rpes, t_us, power_mw)
+
+
+def map_fc(cfg: SYCoreConfig, name: str, d_in: int, d_out: int,
+           density: float = 1.0) -> LayerMapping:
+    """Fully-connected mapping: output neurons pinned across the array."""
+    active = min(cfg.n_rpes, _sub_block_round(d_out, cfg.sub_block))
+    macs = int(d_in * d_out * density)
+    op_cycles = int(math.ceil(d_out / active) * math.ceil(d_in * density))
+    total_cycles = op_cycles + ARRAY_FILL_CYCLES
+    t_us = total_cycles / cfg.freq_mhz
+    power_mw = active * cfg.rpe_power_uw * 1e-3
+    return LayerMapping(name, macs, (active // cfg.cols or 1, cfg.cols),
+                        op_cycles, active / cfg.n_rpes, t_us, power_mw)
+
+
+def map_gemm(cfg: SYCoreConfig, name: str, m: int, k: int, n: int,
+             density: float = 1.0) -> LayerMapping:
+    """Generic GEMM (transformer projections / attention scores)."""
+    tile_m, tile_n = min(m, cfg.rows), min(n, cfg.cols)
+    active = _sub_block_round(tile_m, cfg.sub_block) * _sub_block_round(
+        tile_n, cfg.sub_block)
+    active = min(active, cfg.n_rpes)
+    macs = int(m * k * n * density)
+    tiles = math.ceil(m / cfg.rows) * math.ceil(n / cfg.cols)
+    op_cycles = int(tiles * math.ceil(k * density))
+    t_us = (op_cycles + ARRAY_FILL_CYCLES) / cfg.freq_mhz
+    power_mw = active * cfg.rpe_power_uw * 1e-3
+    return LayerMapping(name, macs, (tile_m, tile_n), op_cycles,
+                        active / cfg.n_rpes, t_us, power_mw)
+
+
+# ---------------------------------------------------------------------------
+# Functional output-stationary dataflow (tile semantics for the Pallas kernel)
+# ---------------------------------------------------------------------------
+
+def output_stationary_matmul(x: Array, w: Array,
+                             tile: Tuple[int, int, int] = (32, 32, 32)
+                             ) -> Array:
+    """Tiled matmul with explicit output-stationary accumulation.
+
+    Partial sums stay pinned per (i, j) output tile while K-slices of inputs
+    and weights stream through — exactly the SYCore dataflow and exactly the
+    grid/accumulation structure of ``kernels/cordic_mac``.  Pure jnp; used
+    as a semantics oracle, not a fast path.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+    bm, bn, bk = tile
+    pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
+    xp = jnp.pad(x, ((0, pm), (0, pk)))
+    wp = jnp.pad(w, ((0, pk), (0, pn)))
+    gm, gn, gk = xp.shape[0] // bm, wp.shape[1] // bn, xp.shape[1] // bk
+    out = jnp.zeros((xp.shape[0], wp.shape[1]), jnp.float32)
+    for i in range(gm):
+        for j in range(gn):
+            acc = jnp.zeros((bm, bn), jnp.float32)  # output-stationary tile
+            for s in range(gk):
+                xs = jax.lax.dynamic_slice(xp, (i * bm, s * bk), (bm, bk))
+                ws = jax.lax.dynamic_slice(wp, (s * bk, j * bn), (bk, bn))
+                acc = acc + xs @ ws
+            out = jax.lax.dynamic_update_slice(out, acc, (i * bm, j * bn))
+    return out[:m, :n]

@@ -1,0 +1,81 @@
+"""Pure-jnp oracle for the CORDIC activation kernel.
+
+Composes the identical integer recurrences (same constants, same shift
+schedule, same guard-bit rounding) in plain jnp — no Pallas — so the kernel
+can be asserted bit-exact.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cordic, fixed_point as fxp
+from repro.core.fixed_point import FxpFormat
+
+LN2 = math.log(2.0)
+GUARD_BITS = 4
+EXP_ARG_CLAMP = 30.0
+
+
+def _hyperbolic_ref(z, fb: int, n: int):
+    inv_gain = jnp.int32(fxp.constant_raw(1.0 / cordic.hyperbolic_gain(n), fb))
+    x = jnp.full_like(z, inv_gain)
+    y = jnp.zeros_like(z)
+    for shift in cordic.hyperbolic_sequence(n):
+        e_i = jnp.int32(fxp.constant_raw(math.atanh(2.0 ** (-shift)), fb))
+        delta = jnp.where(z >= 0, jnp.int32(1), jnp.int32(-1))
+        x, y, z = (x + delta * jnp.right_shift(y, shift),
+                   y + delta * jnp.right_shift(x, shift),
+                   z - delta * e_i)
+    return x, y
+
+
+def _divide_ref(y, x, fb: int, n: int):
+    q = jnp.zeros_like(y)
+    for i in range(n):
+        e_i = jnp.int32(fxp.constant_raw(2.0 ** (-i), fb))
+        delta = jnp.where(y >= 0, jnp.int32(1), jnp.int32(-1))
+        y = y - delta * jnp.right_shift(x, i)
+        q = q + delta * e_i
+    return q
+
+
+def exp_neg_raw_ref(a, fb: int, n_hyp: int):
+    inv_ln2 = jnp.int32(fxp.constant_raw(1.0 / LN2, fb))
+    ln2 = jnp.int32(fxp.constant_raw(LN2, fb))
+    t = a * inv_ln2
+    k = jnp.right_shift(t + (jnp.int32(1) << (2 * fb - 1)), 2 * fb)
+    r = a - k * ln2
+    c, s = _hyperbolic_ref(r, fb, n_hyp)
+    return jnp.right_shift(c + s, jnp.clip(-k, 0, 31))
+
+
+def _round_back_ref(v, guard: int):
+    return jnp.right_shift(v + (jnp.int32(1) << (guard - 1)), guard)
+
+
+def cordic_act_raw_ref(x_raw: jax.Array, *, af: str, fmt: FxpFormat,
+                       n_hyp: int = cordic.N_HYPERBOLIC_STAGES,
+                       n_div: int = cordic.N_DIVISION_STAGES,
+                       guard: int = GUARD_BITS) -> jax.Array:
+    fb = fmt.frac_bits + guard
+    a = jnp.left_shift(x_raw.astype(jnp.int32), guard)
+    one = jnp.int32(1) << fb
+    clamp = jnp.int32(fxp.constant_raw(EXP_ARG_CLAMP, fb))
+    if af == "exp":
+        a = jnp.clip(a, -clamp, jnp.int32(0))
+        return _round_back_ref(exp_neg_raw_ref(a, fb, n_hyp), guard)
+    if af == "tanh":
+        cap = jnp.int32(fxp.constant_raw(
+            min(4.0, fmt.max_value / 2.0 - fmt.resolution), fb))
+        a_abs = jnp.minimum(jnp.abs(a), cap)
+        e2a = exp_neg_raw_ref(-(a_abs + a_abs), fb, n_hyp)
+        q = _divide_ref(e2a - one, e2a + one, fb, n_div)
+        return _round_back_ref(jnp.where(a >= 0, -q, q), guard)
+    if af == "sigmoid":
+        e = exp_neg_raw_ref(jnp.maximum(-jnp.abs(a), -clamp), fb, n_hyp)
+        q = _divide_ref(jnp.full_like(a, one), one + e, fb, n_div)
+        return _round_back_ref(jnp.where(a >= 0, q, one - q), guard)
+    raise ValueError(f"unsupported AF {af!r}")

@@ -1,0 +1,73 @@
+"""Jit'd public wrapper for the CORDIC matmul kernel.
+
+Handles quantization, CAESAR block-shape selection, padding to tile
+boundaries, interpret-mode fallback on CPU, and an STE backward pass so the
+op is usable inside training graphs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fixed_point as fxp
+from repro.core.caesar import pick_block_shape
+from repro.core.fixed_point import FxpFormat
+from repro.kernels.cordic_mac.kernel import cordic_matmul_raw
+
+_ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+
+
+def _pad_to(a: jax.Array, m0: int, m1: int) -> jax.Array:
+    p0 = (-a.shape[0]) % m0
+    p1 = (-a.shape[1]) % m1
+    if p0 or p1:
+        a = jnp.pad(a, ((0, p0), (0, p1)))
+    return a
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "n_stages", "block",
+                                             "interpret"))
+def _fwd(x, w, fmt: FxpFormat, n_stages: int,
+         block: Tuple[int, int, int], interpret: bool):
+    m, k = x.shape
+    n = w.shape[1]
+    x_raw = _pad_to(fxp.quantize(x, fmt), block[0], block[2])
+    w_raw = _pad_to(fxp.quantize(w, fmt), block[2], block[1])
+    out_raw = cordic_matmul_raw(x_raw, w_raw, fmt=fmt, n_stages=n_stages,
+                                block=block, interpret=interpret)
+    return fxp.dequantize(out_raw[:m, :n], fmt)
+
+
+def cordic_matmul(x: jax.Array, w: jax.Array, *, fmt: FxpFormat = fxp.FXP16,
+                  n_stages: int = 5,
+                  block: Optional[Tuple[int, int, int]] = None,
+                  interpret: Optional[bool] = None) -> jax.Array:
+    """``x @ w`` through the RPE's 5-stage linear CORDIC (paper §2.2).
+
+    Differentiable via straight-through estimation: forward is the
+    bit-accurate systolic kernel, backward is the exact matmul VJP.
+    """
+    if interpret is None:
+        interpret = not _ON_TPU
+    if block is None:
+        m, k = x.shape
+        n = w.shape[1]
+        # int32 raw words => 4 bytes/element in VMEM.
+        block = pick_block_shape(m, n, k, bytes_per_el=4, max_block=256)
+
+    @jax.custom_vjp
+    def f(x_, w_):
+        return _fwd(x_, w_, fmt, n_stages, block, interpret)
+
+    def fwd(x_, w_):
+        return f(x_, w_), (x_, w_)
+
+    def bwd(res, g):
+        x_, w_ = res
+        return (g @ w_.T).astype(x_.dtype), (x_.T @ g).astype(w_.dtype)
+
+    f.defvjp(fwd, bwd)
+    return f(x, w)

@@ -1,0 +1,72 @@
+"""Pure-jnp oracle for the CORDIC matmul kernel.
+
+Identity used: the n-stage linear-CORDIC multiply-accumulate
+
+    y[m,n] = sum_k sum_i delta_i[k,n] * (x[m,k] >> i)
+
+commutes (integer adds are associative), so the whole matmul is a sum of n
+*signed-digit matmuls*:
+
+    Y = sum_i  shift_i(X) @ Delta_i,      Delta_i in {-1,+1}^{KxN}
+
+where Delta_i is the stage-i sign plane of the weight residual recurrence —
+a pure function of W, precomputable offline.  This is bit-exact w.r.t. the
+hardware recurrence (and is itself the TPU-native "CORDIC on the MXU"
+formulation discussed in DESIGN.md: n int matmuls against sign planes).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fixed_point as fxp
+from repro.core.fixed_point import FxpFormat
+
+
+def weight_sign_planes(w_raw: jax.Array, fmt: FxpFormat, n_stages: int
+                       ) -> jax.Array:
+    """Delta_i planes, shape (n_stages, K, N), values in {-1, +1} (int32)."""
+    z = w_raw.astype(jnp.int32)
+    planes = []
+    for i in range(n_stages):
+        delta = jnp.where(z >= 0, jnp.int32(1), jnp.int32(-1))
+        planes.append(delta)
+        z = z - delta * jnp.int32(fxp.constant(2.0 ** (-i), fmt))
+    return jnp.stack(planes)
+
+
+def cordic_matmul_raw_ref(x_raw: jax.Array, w_raw: jax.Array, *,
+                          fmt: FxpFormat, n_stages: int) -> jax.Array:
+    x_raw = x_raw.astype(jnp.int32)
+    planes = weight_sign_planes(w_raw, fmt, n_stages)
+    out = jnp.zeros((x_raw.shape[0], w_raw.shape[1]), jnp.int32)
+    for i in range(n_stages):
+        xs = jnp.right_shift(x_raw, i)
+        out = out + jax.lax.dot_general(
+            xs, planes[i],
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+    return out
+
+
+def cordic_matmul_ref(x: jax.Array, w: jax.Array, *, fmt: FxpFormat,
+                      n_stages: int) -> jax.Array:
+    """Float frontend: quantize -> raw matmul -> dequantize."""
+    x_raw = fxp.quantize(x, fmt)
+    w_raw = fxp.quantize(w, fmt)
+    out_raw = cordic_matmul_raw_ref(x_raw, w_raw, fmt=fmt, n_stages=n_stages)
+    return fxp.dequantize(out_raw, fmt)
+
+
+def effective_weight(w: jax.Array, fmt: FxpFormat, n_stages: int
+                     ) -> jax.Array:
+    """The signed-digit value the CORDIC recurrence effectively multiplies
+    by: w_eff = sum_i delta_i * 2^-i.  Useful for error analysis — the MAC's
+    multiplicative error is exactly (w_eff - w), independent of x up to the
+    per-stage truncation of x (captured only by the full recurrence)."""
+    w_raw = fxp.quantize(w, fmt)
+    planes = weight_sign_planes(w_raw, fmt, n_stages)
+    coeffs = jnp.asarray([2.0 ** (-i) for i in range(n_stages)], jnp.float32)
+    return jnp.tensordot(coeffs, planes.astype(jnp.float32), axes=1)

@@ -1,0 +1,55 @@
+"""Jit'd public wrapper for the CORDIC SoftMax kernel (float frontend)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cordic, fixed_point as fxp
+from repro.core.fixed_point import FxpFormat
+from repro.kernels.cordic_softmax.kernel import cordic_softmax_raw
+
+_ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "n_hyp", "n_div",
+                                             "guard", "interpret"))
+def _fwd(x, fmt: FxpFormat, n_hyp: int, n_div: int, guard: int,
+         interpret: bool):
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    # Pre-scale into fmt range: softmax(x) == softmax(x - max) and the
+    # kernel re-subtracts its own integer max, so only quantization of the
+    # *differences* matters; clamp keeps huge logits finite in fmt.
+    x2 = x2 - jax.lax.stop_gradient(jnp.max(x2, axis=-1, keepdims=True))
+    raw = fxp.quantize(x2, fmt)
+    out = cordic_softmax_raw(raw, fmt=fmt, n_hyp=n_hyp, n_div=n_div,
+                             guard=guard, interpret=interpret)
+    return fxp.dequantize(out, fmt).reshape(shape).astype(x.dtype)
+
+
+def cordic_softmax(x: jax.Array, *, fmt: FxpFormat = fxp.FXP16,
+                   n_hyp: int = cordic.N_HYPERBOLIC_STAGES,
+                   n_div: Optional[int] = None, guard: int = 4,
+                   interpret: Optional[bool] = None) -> jax.Array:
+    """Row softmax through the RPE FIFO datapath, STE gradients."""
+    if interpret is None:
+        interpret = not _ON_TPU
+    if n_div is None:
+        n_div = max(cordic.N_DIVISION_STAGES, fmt.frac_bits + guard)
+
+    @jax.custom_vjp
+    def f(v):
+        return _fwd(v, fmt, n_hyp, n_div, guard, interpret)
+
+    def fwd(v):
+        return f(v), v
+
+    def bwd(v, g):
+        _, vjp = jax.vjp(lambda t: jax.nn.softmax(t, axis=-1), v)
+        return vjp(g)
+
+    f.defvjp(fwd, bwd)
+    return f(x)

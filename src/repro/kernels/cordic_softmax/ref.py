@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the CORDIC SoftMax kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cordic, fixed_point as fxp
+from repro.core.fixed_point import FxpFormat
+from repro.kernels.cordic_act.ref import (EXP_ARG_CLAMP, GUARD_BITS,
+                                          _divide_ref, _round_back_ref,
+                                          exp_neg_raw_ref)
+
+
+def cordic_softmax_raw_ref(x_raw: jax.Array, *, fmt: FxpFormat,
+                           n_hyp: int = cordic.N_HYPERBOLIC_STAGES,
+                           n_div: int = cordic.N_DIVISION_STAGES,
+                           guard: int = GUARD_BITS) -> jax.Array:
+    fb = fmt.frac_bits + guard
+    a = jnp.left_shift(x_raw.astype(jnp.int32), guard)
+    clamp = jnp.int32(fxp.constant_raw(EXP_ARG_CLAMP, fb))
+    m = jnp.max(a, axis=-1, keepdims=True)
+    e = exp_neg_raw_ref(jnp.maximum(a - m, -clamp), fb, n_hyp)
+    tot = jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), jnp.int32(1))
+    q = _divide_ref(e, jnp.broadcast_to(tot, e.shape), fb, n_div)
+    q = jnp.where(e == 0, jnp.int32(0), q)
+    return _round_back_ref(q, guard)

@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: causal flash attention (online softmax).
+
+Beyond-paper perf layer for prefill_32k: never materialises the (S x S)
+score matrix.  Grid (heads, q_blocks, k_blocks) with the K axis innermost;
+the output tile plus running (max, sum) statistics stay pinned in VMEM
+scratch across the K sweep — the same output-stationary discipline as the
+paper's SYCore, applied to attention.
+
+Causally-dead (q_block, k_block) pairs are skipped with ``pl.when`` (the
+scheduler-level analogue of CAESAR's zero-skip gating).
+
+GQA is handled in ops.py via the K/V BlockSpec index map (q head h reads
+kv head h // group) — no materialised head replication.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  bq: int, bk: int, scale: float, causal: bool, nk: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * bq
+    k_start = ik * bk
+    live = jnp.logical_or(not causal,
+                          k_start <= q_start + bq - 1)
+
+    @pl.when(live)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)              # (bq, d)
+        k = k_ref[0].astype(jnp.float32)              # (bk, d)
+        v = v_ref[0].astype(jnp.float32)              # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, bk)
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_prev * alpha + jnp.sum(p, axis=-1)
+        m_scr[...] = m_new
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_nhd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, block_q: int = 128,
+                        block_k: int = 128, group: int = 1,
+                        interpret: bool = True) -> jax.Array:
+    """q: (Hq, Sq, d); k/v: (Hkv, Sk, d) with Hq = group * Hkv.
+
+    Returns (Hq, Sq, d) in q's dtype.  Sq/Sk must tile by the blocks.
+    """
+    hq, sq, d = q.shape
+    hkv, sk, _ = k.shape
+    assert hq == group * hkv, (hq, hkv, group)
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0
+    nk = sk // bk
+    grid = (hq, sq // bq, nk)
+    kernel = functools.partial(_flash_kernel, bq=bq, bk=bk,
+                               scale=1.0 / (d ** 0.5), causal=causal, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j, g=group: (h // g, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j, g=group: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

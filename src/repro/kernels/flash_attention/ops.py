@@ -1,0 +1,36 @@
+"""Jit'd public wrapper: (B, S, H, d) GQA frontend for the flash kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_nhd
+
+_ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """q: (B, Sq, Hq, d); k/v: (B, Sk, Hkv, d).  Returns (B, Sq, Hq, d)."""
+    if interpret is None:
+        interpret = not _ON_TPU
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    group = hq // hkv
+    qn = q.transpose(0, 2, 1, 3).reshape(b * hq, sq, d)
+    kn = k.transpose(0, 2, 1, 3).reshape(b * hkv, sk, d)
+    vn = v.transpose(0, 2, 1, 3).reshape(b * hkv, sk, d)
+    out = jax.vmap(
+        lambda qq, kk, vv: flash_attention_nhd(
+            qq, kk, vv, causal=causal, block_q=block_q, block_k=block_k,
+            group=group, interpret=interpret)
+    )(qn.reshape(b, hq, sq, d), kn.reshape(b, hkv, sk, d),
+      vn.reshape(b, hkv, sk, d))
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_nhd_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, group: int = 1) -> jax.Array:
+    """Materialised-scores reference.  q (Hq,Sq,d); k/v (Hkv,Sk,d)."""
+    hq, sq, d = q.shape
+    hkv, sk, _ = k.shape
+    kk = jnp.repeat(k, group, axis=0)
+    vv = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) / (d ** 0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p,
+                      vv.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: RWKV6 (Finch) wkv recurrence.
+
+The attention-free mixer's hotspot: per head, a (dk x dv) state S updated
+per token with data-dependent per-channel decay,
+
+    out_t = r_t · (S + (u ⊙ k_t) v_tᵀ)
+    S    <- diag(w_t) S + k_t v_tᵀ
+
+Grid (batch*heads, T/bt) with the time axis sequential ("arbitrary"); the
+state S lives in VMEM scratch across the whole sweep — the recurrent
+analogue of the SYCore output-stationary discipline (state stays, tokens
+stream).  Inside a block the bt steps run as an unrolled/fori loop of
+rank-1 updates on the VPU.
+
+Bit-comparable (f32) to :mod:`repro.kernels.wkv.ref`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_scr, *, bt: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    r = r_ref[0].astype(jnp.float32)   # (bt, dk)
+    k = k_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)   # (bt, dv)
+    u = u_ref[0].astype(jnp.float32)   # (1, dk) broadcast row
+
+    def step(i, carry):
+        s, out = carry
+        kv = k[i][:, None] * v[i][None, :]              # (dk, dv)
+        y = (r[i] * u[0])[None, :] @ kv + r[i][None, :] @ s
+        out = jax.lax.dynamic_update_slice_in_dim(out, y, i, axis=0)
+        s = w[i][:, None] * s + kv
+        return s, out
+
+    s0 = s_scr[...]
+    out0 = jnp.zeros((bt, v.shape[1]), jnp.float32)
+    s_fin, out = jax.lax.fori_loop(0, bt, step, (s0, out0))
+    s_scr[...] = s_fin
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+def wkv_recurrence(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                   u: jax.Array, *, block_t: int = 64,
+                   interpret: bool = True) -> jax.Array:
+    """r/k/w: (BH, T, dk); v: (BH, T, dv); u: (BH, dk).  -> (BH, T, dv).
+
+    T must tile by block_t; state starts at zero (training semantics — the
+    decode path carries S explicitly in jnp, see models/ssm.py).
+    """
+    bh, t, dk = r.shape
+    dv = v.shape[-1]
+    bt = min(block_t, t)
+    assert t % bt == 0
+    grid = (bh, t // bt)
+    kernel = functools.partial(_wkv_kernel, bt=bt)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bt, dk), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, bt, dk), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, bt, dv), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, bt, dk), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, 1, dk), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bt, dv), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, dv), r.dtype),
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(r, k, v, w, u.reshape(bh, 1, dk))

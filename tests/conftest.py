@@ -1,0 +1,13 @@
+import os
+
+# Keep tests on the single real CPU device (the 512-device override is ONLY
+# for launch/dryrun.py).  Determinism + no x64 surprises.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,179 @@
+"""Unit + property tests for the CORDIC core (fixed_point, cordic modes)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cordic, fixed_point as fxp
+
+FMTS = [fxp.FXP8, fxp.FXP16, fxp.FXP32]
+
+
+class TestFixedPoint:
+    @pytest.mark.parametrize("fmt", FMTS)
+    def test_roundtrip_error_bounded(self, fmt, rng):
+        x = rng.uniform(fmt.min_value, fmt.max_value, (256,)).astype(np.float32)
+        rt = fxp.roundtrip(jnp.array(x), fmt)
+        assert float(jnp.abs(rt - x).max()) <= fmt.resolution / 2 + 1e-7
+
+    def test_saturation(self):
+        fmt = fxp.FXP8
+        assert int(fxp.quantize(1e9, fmt)) == fmt.raw_max
+        assert int(fxp.quantize(-1e9, fmt)) == fmt.raw_min
+
+    @given(st.floats(-100, 100))
+    @settings(max_examples=50, deadline=None)
+    def test_quantize_monotone(self, v):
+        fmt = fxp.FXP16
+        a = int(fxp.quantize(v, fmt))
+        b = int(fxp.quantize(v + 0.1, fmt))
+        assert b >= a
+
+    def test_ashr_is_floor_division(self):
+        x = jnp.array([-7, -1, 0, 1, 7], jnp.int32)
+        np.testing.assert_array_equal(np.asarray(fxp.ashr(x, 1)),
+                                      np.floor_divide(np.asarray(x), 2))
+
+
+class TestLinearMode:
+    @pytest.mark.parametrize("fmt", FMTS)
+    def test_mac_converges(self, fmt, rng):
+        x = jnp.array(rng.uniform(-2, 2, (512,)), jnp.float32)
+        w = jnp.array(rng.uniform(-1.9, 1.9, (512,)), jnp.float32)
+        b = jnp.array(rng.uniform(-1, 1, (512,)), jnp.float32)
+        n = fmt.frac_bits + 1
+        got = cordic.mac(x, w, b, fmt, n=n)
+        want = b + x * w
+        # error ~ |x| * 2^-n plus accumulation of n truncations
+        tol = 4.0 * (n + 2) * fmt.resolution
+        assert float(jnp.abs(got - want).max()) < tol
+
+    def test_error_decreases_with_iterations(self, rng):
+        """Property from the paper's Pareto analysis: more stages => less err."""
+        fmt = fxp.FXP32
+        x = jnp.array(rng.uniform(-2, 2, (2048,)), jnp.float32)
+        w = jnp.array(rng.uniform(-1.9, 1.9, (2048,)), jnp.float32)
+        b = jnp.zeros_like(x)
+        want = x * w
+        errs = [float(jnp.abs(cordic.mac(x, w, b, fmt, n=n) - want).mean())
+                for n in (2, 4, 8, 12)]
+        assert errs[0] > errs[1] > errs[2] > errs[3]
+
+    def test_unroll_matches_loop(self, rng):
+        fmt = fxp.FXP16
+        x = fxp.quantize(jnp.array(rng.uniform(-2, 2, (64,)), jnp.float32), fmt)
+        y = jnp.zeros_like(x)
+        z = fxp.quantize(jnp.array(rng.uniform(-1.9, 1.9, (64,)), jnp.float32), fmt)
+        a = cordic.linear_rotate_raw(x, y, z, fmt, n=5, unroll=True)
+        b = cordic.linear_rotate_raw(x, y, z, fmt, n=5, unroll=False)
+        np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+
+    @given(st.integers(-500, 500), st.integers(-480, 480))
+    @settings(max_examples=100, deadline=None)
+    def test_residual_bound(self, xr, zr):
+        """|z| shrinks below the last angle constant => multiply error bound."""
+        fmt = fxp.FXP16
+        n = 8
+        x = jnp.array([xr], jnp.int32)
+        y = jnp.zeros_like(x)
+        z = jnp.array([zr], jnp.int32)
+        _, z_res = cordic.linear_rotate_raw(x, y, z, fmt, n=n)
+        assert abs(int(z_res[0])) <= 2 * fxp.constant(2.0 ** (-(n - 1)), fmt) + 1
+
+
+class TestHyperbolicMode:
+    def test_sequence_repeats(self):
+        seq = cordic.hyperbolic_sequence(16)
+        assert seq[3] == seq[4] == 4
+        assert 13 in seq and seq.count(13) == 2
+
+    @pytest.mark.parametrize("n", [5, 8, 12])
+    def test_cosh_sinh(self, n, rng):
+        fmt = fxp.FXP32
+        a = jnp.array(rng.uniform(-1.0, 1.0, (256,)), jnp.float32)
+        c, s = cordic.cosh_sinh(a, fmt, n)
+        tol = 4.0 * 2.0 ** (-n) + 8 * (n + 2) * fmt.resolution
+        assert float(jnp.abs(c - jnp.cosh(a)).max()) < tol
+        assert float(jnp.abs(s - jnp.sinh(a)).max()) < tol
+
+    def test_exp_range_extension(self, rng):
+        fmt = fxp.FXP16
+        a = jnp.array(rng.uniform(-12.0, 3.0, (512,)), jnp.float32)
+        e = cordic.exp_fxp(a, fmt, n=12, range_extend=True)
+        rel = jnp.abs(e - jnp.exp(a)) / jnp.exp(a)
+        assert float(rel.max()) < 0.05
+
+    def test_identity_cosh2_minus_sinh2(self, rng):
+        """Hyperbolic invariant survives fixed-point within tolerance."""
+        fmt = fxp.FXP32
+        a = jnp.array(rng.uniform(-1.0, 1.0, (128,)), jnp.float32)
+        c, s = cordic.cosh_sinh(a, fmt, 14)
+        assert float(jnp.abs(c * c - s * s - 1.0).max()) < 0.01
+
+
+class TestDivisionMode:
+    @given(st.floats(-1.8, 1.8), st.floats(0.25, 1.9))
+    @settings(max_examples=100, deadline=None)
+    def test_quotient(self, num, den):
+        fmt = fxp.FXP16
+        q = cordic.divide(jnp.array([num * den], jnp.float32),
+                          jnp.array([den], jnp.float32), fmt, n=12)
+        assert abs(float(q[0]) - num) < 0.02 + 4 * fmt.resolution
+
+    def test_negative_denominator(self):
+        fmt = fxp.FXP16
+        q = cordic.divide(jnp.array([1.0]), jnp.array([-2.0]), fmt, n=12)
+        assert abs(float(q[0]) + 0.5) < 0.01
+
+
+class TestCircularMode:
+    def test_cos_sin(self, rng):
+        fmt = fxp.FXP32
+        a = jnp.array(rng.uniform(-1.5, 1.5, (128,)), jnp.float32)
+        c, s = cordic.cos_sin(a, fmt, 14)
+        assert float(jnp.abs(c - jnp.cos(a)).max()) < 0.01
+        assert float(jnp.abs(s - jnp.sin(a)).max()) < 0.01
+
+
+class TestSqrtMode:
+    def test_sqrt_native_range(self, rng):
+        fmt = fxp.FXP16
+        a = jnp.array(rng.uniform(0.05, 1.9, (256,)), jnp.float32)
+        got = cordic.sqrt_fxp(a, fmt, n=12, range_extend=False)
+        assert float(jnp.abs(got - jnp.sqrt(a)).max()) < 0.03
+
+    def test_sqrt_range_extended(self, rng):
+        fmt = fxp.FXP16
+        a = jnp.array(rng.uniform(1e-3, 900.0, (512,)), jnp.float32)
+        got = cordic.sqrt_fxp(a, fmt, n=12)
+        rel = jnp.abs(got - jnp.sqrt(a)) / jnp.maximum(jnp.sqrt(a), 1e-6)
+        assert float(rel.max()) < 0.05
+
+    def test_sqrt_zero(self):
+        assert float(cordic.sqrt_fxp(jnp.zeros(3), fxp.FXP16)[0]) == 0.0
+
+    def test_rsqrt(self, rng):
+        fmt = fxp.FXP16
+        a = jnp.array(rng.uniform(0.1, 8.0, (128,)), jnp.float32)
+        got = cordic.rsqrt_fxp(a, fmt, n=12)
+        rel = jnp.abs(got - 1.0 / jnp.sqrt(a)) * jnp.sqrt(a)
+        assert float(rel.max()) < 0.05
+
+
+class TestLnMode:
+    def test_ln_native(self, rng):
+        fmt = fxp.FXP16
+        a = jnp.array(rng.uniform(0.5, 2.0, (256,)), jnp.float32)
+        got = cordic.ln_fxp(a, fmt, n=12, range_extend=False)
+        assert float(jnp.abs(got - jnp.log(a)).max()) < 0.02
+
+    def test_ln_range_extended(self, rng):
+        fmt = fxp.FXP16
+        a = jnp.array(rng.uniform(1e-2, 500.0, (512,)), jnp.float32)
+        got = cordic.ln_fxp(a, fmt, n=12)
+        assert float(jnp.abs(got - jnp.log(a)).max()) < 0.03
+
+    def test_ln_one_is_zero(self):
+        fmt = fxp.FXP16
+        assert abs(float(cordic.ln_fxp(jnp.ones(2), fmt, 12)[0])) < 0.01

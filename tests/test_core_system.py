@@ -1,0 +1,213 @@
+"""Tests for pruning, quantization, Pareto, CAESAR and SYCore models."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import caesar, pareto, pruning, sycore
+from repro.core.quantization import QuantPolicy, quantize_weight, quantized_dense
+from repro.core.rpe import RPE, throughput_gops
+from repro.core.activations import CordicPolicy
+
+
+class TestPruning:
+    def test_magnitude_rate(self, rng):
+        w = jnp.array(rng.normal(size=(64, 64)), jnp.float32)
+        _, mask = pruning.apply_policy(w, pruning.PruningPolicy(rate=0.40))
+        got = 1.0 - float(mask.mean())
+        assert abs(got - 0.40) < 0.01
+
+    def test_magnitude_keeps_largest(self, rng):
+        w = jnp.array(rng.normal(size=(32, 32)), jnp.float32)
+        pw, mask = pruning.apply_policy(w, pruning.PruningPolicy(rate=0.5))
+        kept_min = float(jnp.abs(w[mask]).min())
+        dropped_max = float(jnp.abs(w[~mask]).max()) if bool(jnp.any(~mask)) else 0.0
+        assert kept_min >= dropped_max
+
+    @given(st.integers(1, 8), st.integers(2, 16))
+    @settings(max_examples=30, deadline=None)
+    def test_nm_mask_invariant(self, n, m):
+        """Every complete group of m has exactly n survivors."""
+        if n >= m:
+            return
+        r = np.random.default_rng(n * 100 + m)
+        w = jnp.array(r.normal(size=(8, m * 6)), jnp.float32)
+        mask = pruning.nm_mask(w, n, m, axis=-1)
+        groups = np.asarray(mask).reshape(8, 6, m)
+        assert np.all(groups.sum(-1) == n)
+
+    def test_mask_grads_freezes_pruned(self, rng):
+        w = jnp.array(rng.normal(size=(16, 16)), jnp.float32)
+        params = {"w": w, "bias": jnp.zeros((16,))}
+        pruned, masks = pruning.prune_tree(params, pruning.PruningPolicy(0.4),
+                                           min_size=4)
+        grads = jax.tree_util.tree_map(jnp.ones_like, params)
+        mg = pruning.mask_grads(grads, masks)
+        assert float(jnp.abs(mg["w"][~masks["w"]]).max()) == 0.0
+        np.testing.assert_array_equal(np.asarray(mg["bias"]), np.ones(16))
+
+    def test_stats(self, rng):
+        w = {"w": jnp.array(rng.normal(size=(64, 64)), jnp.float32)}
+        pruned, masks = pruning.prune_tree(w, pruning.PruningPolicy(0.4),
+                                           min_size=4)
+        s = pruning.sparsity_stats(pruned, masks)
+        assert abs(s["sparsity"] - 0.4) < 0.02
+
+
+class TestQuantization:
+    def test_weight_roundtrip_error(self, rng):
+        w = jnp.array(rng.normal(size=(128, 64)), jnp.float32)
+        q, s = quantize_weight(w, QuantPolicy())
+        back = q.astype(jnp.float32) * s
+        # pow2 per-channel scale: error <= scale/2 <= amax/127
+        amax = float(jnp.abs(w).max())
+        assert float(jnp.abs(back - w).max()) <= amax / 127 * 2
+
+    def test_quantized_dense_close(self, rng):
+        x = jnp.array(rng.normal(size=(32, 128)), jnp.float32)
+        w = jnp.array(rng.normal(size=(128, 64)) * 0.05, jnp.float32)
+        got = quantized_dense(x, w, QuantPolicy())
+        want = x @ w
+        rel = float(jnp.abs(got - want).max() / jnp.abs(want).max())
+        assert rel < 0.05
+
+    def test_quantized_dense_grads_flow(self, rng):
+        x = jnp.array(rng.normal(size=(8, 16)), jnp.float32)
+        w = jnp.array(rng.normal(size=(16, 4)) * 0.1, jnp.float32)
+        gx, gw = jax.grad(lambda a, b: quantized_dense(a, b, QuantPolicy()).sum(),
+                          argnums=(0, 1))(x, w)
+        assert np.isfinite(np.asarray(gx)).all()
+        assert np.isfinite(np.asarray(gw)).all()
+
+    def test_weight_only_mode(self, rng):
+        x = jnp.array(rng.normal(size=(8, 16)), jnp.float32)
+        w = jnp.array(rng.normal(size=(16, 4)) * 0.1, jnp.float32)
+        got = quantized_dense(x, w, QuantPolicy(act_bits=None))
+        assert got.shape == (8, 4)
+
+
+class TestPareto:
+    def test_mac_error_monotone_in_iterations(self):
+        pts = pareto.sweep_mac(bits_list=(32,), iterations=(2, 4, 8, 12),
+                               n_samples=512)
+        errs = [p.mae for p in sorted(pts, key=lambda p: p.iterations)]
+        assert errs[0] > errs[-1]
+
+    def test_knee_detects_saturation(self):
+        pts = pareto.sweep_activation("sigmoid", bits_list=(8,),
+                                      iterations=tuple(range(2, 12)),
+                                      n_samples=256)
+        k = pareto.knee(pts, "mae")
+        # paper's conclusion: ~5 stages suffice at 8-bit
+        # 8-bit saturates at the resolution floor within a few stages
+        assert 2 <= k[8] <= 8
+
+    def test_more_bits_less_error(self):
+        pts = pareto.sweep_activation("tanh", bits_list=(4, 16),
+                                      iterations=(8,), n_samples=256)
+        by_bits = {p.bits: p.mae for p in pts}
+        assert by_bits[16] < by_bits[4]
+
+
+class TestSYCoreCaesar:
+    def test_vgg16_schedule_structure(self):
+        sched = caesar.Caesar(pruning=None).schedule(caesar.vgg16_cifar100())
+        assert len(sched.layers) == 16  # 13 conv + 3 fc (pool on host)
+        c11 = sched.layers[0]
+        # paper Table 3: C1_1 = 1728 op cycles at 32x32 dense
+        assert c11.op_cycles == 1728
+        assert c11.utilization == 1.0
+
+    def test_pruning_reduces_cycles(self):
+        dense = caesar.Caesar(pruning=None).schedule(caesar.vgg16_cifar100())
+        sparse = caesar.Caesar(
+            pruning=pruning.PruningPolicy(rate=0.40)).schedule(
+                caesar.vgg16_cifar100())
+        assert sparse.total_time_us < dense.total_time_us * 0.75
+
+    def test_transformer_specs(self):
+        specs = caesar.transformer_block_specs("b0", 128, 256, 8, 1024)
+        sched = caesar.Caesar().schedule(specs)
+        assert sched.total_time_us > 0
+        assert len(sched.layers) == 7
+
+    def test_pick_block_shape_fits_vmem(self):
+        for dims in [(4096, 13696, 4096), (256, 256, 256), (7, 5, 3),
+                     (32768, 128, 128)]:
+            bm, bn, bk = caesar.pick_block_shape(*dims)
+            fp = (bm * bk + bk * bn) * 2 + bm * bn * 4
+            assert fp <= caesar.VMEM_BYTES * 0.60 + 1
+            if min(dims) >= 128:
+                assert bm % 128 == 0 and bn % 128 == 0 and bk % 128 == 0
+
+    def test_output_stationary_matches_dot(self, rng):
+        x = jnp.array(rng.normal(size=(50, 70)), jnp.float32)
+        w = jnp.array(rng.normal(size=(70, 30)), jnp.float32)
+        got = sycore.output_stationary_matmul(x, w, (32, 32, 32))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(x @ w),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_rpe_cycle_model(self):
+        rpe = RPE()
+        assert rpe.mac_cycles(1) == 5          # pipeline fill
+        assert rpe.mac_cycles(100) == 104      # II=1 after fill
+        assert rpe.af_cycles("tanh") == 9      # 5 hyperbolic + 4 division
+        assert rpe.af_cycles("relu") == 1
+        assert rpe.mac_cycles(10, pipelined=False) == 50  # iterative variant
+
+    def test_rpe_neuron(self, rng):
+        rpe = RPE(CordicPolicy(bits=16, n_linear=10))
+        x = jnp.array(rng.uniform(-1, 1, (4, 8)), jnp.float32)
+        w = jnp.array(rng.uniform(-1, 1, (8,)), jnp.float32)
+        got = rpe.neuron(x, w, 0.1, af="sigmoid")
+        want = jax.nn.sigmoid(x @ w + 0.1)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0.05)
+
+    def test_throughput_model_3ghz(self):
+        # paper: 1024 RPEs at 3 GHz, 1 MAC/cycle => ~6.1 TOPS > 4.57 quoted
+        tops = throughput_gops(3000, 1024) / 1000
+        assert 4.0 < tops < 7.0
+
+
+class TestShardingRuleProperties:
+    """Property tests: the rule engine must always produce a valid spec."""
+
+    @given(st.lists(st.sampled_from(
+        ["batch", "seq", "embed", "vocab", "heads", "kv_heads", "mlp",
+         "experts", "expert_mlp", "layers", None]), min_size=1, max_size=4),
+        st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=60, deadline=None)
+    def test_spec_always_valid(self, axes, seed):
+        import jax
+        from repro.parallel.sharding import spec_for
+        r = np.random.default_rng(seed)
+        shape = tuple(int(r.choice([1, 3, 8, 16, 40, 128, 256]))
+                      for _ in axes)
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        # single-device mesh: everything must replicate (sizes are 1)
+        ps = spec_for(shape, tuple(axes), mesh)
+        flat = []
+        for e in ps:
+            if e is None:
+                continue
+            flat += list(e) if isinstance(e, tuple) else [e]
+        # no axis reused; every named axis exists in the mesh
+        assert len(flat) == len(set(flat))
+        assert all(a in mesh.shape for a in flat)
+
+    @given(st.integers(1, 512), st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=40, deadline=None)
+    def test_sharded_dims_always_divide(self, dim, seed):
+        import jax
+        from repro.parallel.sharding import spec_for
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        ps = spec_for((dim, dim), ("vocab", "mlp"), mesh)
+        for entry, d in zip(tuple(ps) + (None,) * 2, (dim, dim)):
+            if entry is None:
+                continue
+            axes_ = entry if isinstance(entry, tuple) else (entry,)
+            n = 1
+            for a in axes_:
+                n *= mesh.shape[a]
+            assert d % n == 0

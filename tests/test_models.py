@@ -1,0 +1,205 @@
+"""Per-architecture smoke tests (reduced configs) + model-level invariants.
+
+Each of the 10 assigned architectures instantiates a reduced config of the
+same family and runs one forward/train step on CPU, asserting output shapes
+and the absence of NaNs — plus serving-path consistency checks.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, CORDIC_EXEC, get_arch
+from repro.configs.base import ExecutionPolicy
+from repro.models import transformer as T
+from repro.models.model_zoo import build_model
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+def _batch(model, key, b=2, s=16):
+    return model.make_batch(key, b, s, "train")
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_arch(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(model, jax.random.PRNGKey(1))
+    logits = model.forward(params, batch)
+    b, s = 2, 16
+    if cfg.n_codebooks:
+        assert logits.shape == (b, s, cfg.n_codebooks, cfg.vocab_size)
+    else:
+        assert logits.shape == (b, s, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+    # one SGD step: loss must be finite and decrease-able (grads finite)
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: model.loss(p, batch), has_aux=True)(params)
+    assert np.isfinite(float(loss))
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert all(bool(jnp.isfinite(g.astype(jnp.float32)).all()) for g in leaves)
+    params2 = jax.tree_util.tree_map(
+        lambda p, g: p - 0.5 * g.astype(p.dtype), params, grads)
+    loss2, _ = model.loss(params2, batch)
+    assert np.isfinite(float(loss2))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_serving_consistency(arch):
+    """prefill's last logits == forward's last logits; decode runs."""
+    cfg = get_arch(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = model.make_batch(jax.random.PRNGKey(1), 2, 16, "prefill")
+    lf = model.forward(params, batch)[:, -1:]
+    lp, state = model.prefill(params, batch)
+    np.testing.assert_allclose(
+        np.asarray(lp.astype(jnp.float32)).reshape(2, -1),
+        np.asarray(lf.astype(jnp.float32)).reshape(2, -1),
+        atol=1e-2, rtol=1e-2)
+    nb = model.make_batch(jax.random.PRNGKey(2), 2, 1, "decode")
+    dl, state2 = model.decode_step(params, state, nb)
+    assert int(state2.pos) == 17
+    assert bool(jnp.isfinite(dl.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", ["glm4-9b", "rwkv6-3b", "hymba-1.5b"])
+def test_decode_matches_forward(arch):
+    """Teacher-forced decode of the last token == forward at that position."""
+    cfg = get_arch(arch).reduced().scaled(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    full = model.make_batch(jax.random.PRNGKey(1), 2, 16, "prefill")
+    key = "tokens" if cfg.input_kind == "tokens" else "frames"
+    prefix = {key: full[key][:, :15]}
+    last = {key: full[key][:, 15:16]}
+    _, state = model.prefill(params, prefix)
+    dl, _ = model.decode_step(params, state, last)
+    lf = model.forward(params, full)[:, -1:]
+    np.testing.assert_allclose(
+        np.asarray(dl.astype(jnp.float32)).reshape(2, -1),
+        np.asarray(lf.astype(jnp.float32)).reshape(2, -1),
+        atol=1e-3, rtol=1e-3)
+
+
+def test_chunked_matches_naive_attention():
+    cfg = get_arch("glm4-9b").reduced().scaled(attn_impl="naive",
+                                               dtype="float32")
+    cfg_c = cfg.scaled(attn_impl="chunked", attn_chunk=8)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = model.make_batch(jax.random.PRNGKey(1), 2, 32, "prefill")
+    a = build_model(cfg).forward(params, batch)
+    b = build_model(cfg_c).forward(params, batch)
+    np.testing.assert_allclose(np.asarray(a.astype(jnp.float32)),
+                               np.asarray(b.astype(jnp.float32)),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_sliding_window_limits_context():
+    """A token outside every window cannot influence the output."""
+    cfg = get_arch("hymba-1.5b").reduced().scaled(
+        sliding_window=4, global_attn_every=0, attn_impl="naive")
+    # pure-window attention (no global layers): perturb token 0, check the
+    # last position (t=15, window 4 => sees 12..15 only) via attention-only
+    # model: isolate by zeroing the ssm branch is overkill; instead compare
+    # attention masks directly.
+    from repro.models.attention import _causal_window_mask
+    m = _causal_window_mask(jnp.arange(16), jnp.arange(16), 4)
+    assert not bool(m[15, 0])
+    assert bool(m[15, 12]) and bool(m[15, 15])
+    assert not bool(m[0, 1])  # causal
+
+
+@pytest.mark.parametrize("arch", ["glm4-9b", "granite-moe-3b-a800m"])
+def test_cordic_execution_mode(arch):
+    """The paper's FxP8+DA-VINCI policy runs end-to-end without NaNs and
+    stays close to the bf16 reference (QAT-grade fidelity)."""
+    cfg = get_arch(arch).reduced().scaled(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = model.make_batch(jax.random.PRNGKey(1), 2, 16, "train")
+    ref = model.forward(params, batch, ExecutionPolicy(matmul="bf16"))
+    got = model.forward(params, batch, CORDIC_EXEC)
+    assert bool(jnp.isfinite(got.astype(jnp.float32)).all())
+    # logits correlate strongly with the float path
+    a = np.asarray(ref.astype(jnp.float32)).ravel()
+    g = np.asarray(got.astype(jnp.float32)).ravel()
+    corr = np.corrcoef(a, g)[0, 1]
+    assert corr > 0.95, corr
+
+
+def test_moe_router_load_properties():
+    """Capacity dispatch drops at most the expected fraction; gates sum 1."""
+    from repro.models import moe as M
+    cfg = get_arch("granite-moe-3b-a800m").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    bp = jax.tree_util.tree_map(lambda x: x[0], params["blocks"]["moe"])
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 16, cfg.d_model))
+    out, aux = M.moe_ffn(x, M.MoEParams(**bp), cfg, cfg.exec_policy)
+    assert out.shape == x.shape
+    assert np.isfinite(float(aux))
+    assert float(aux) >= 1.0 - 1e-3  # Switch aux lower bound ~1 at balance
+
+
+def test_musicgen_codebook_heads():
+    cfg = get_arch("musicgen-medium").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = model.make_batch(jax.random.PRNGKey(1), 2, 8, "train")
+    assert batch["labels"].shape == (2, 8, cfg.n_codebooks)
+    loss, _ = model.loss(params, batch)
+    assert np.isfinite(float(loss))
+
+
+def test_long_context_state_is_o1_for_ssm():
+    """rwkv6 decode state must not scale with context length."""
+    cfg = get_arch("rwkv6-3b").reduced()
+    model = build_model(cfg)
+    s1 = model.init_decode_state(1, 1024, abstract=True)
+    s2 = model.init_decode_state(1, 524288, abstract=True)
+    sz = lambda s: sum(np.prod(x.shape) for x in jax.tree_util.tree_leaves(s))
+    assert sz(s1) == sz(s2)
+
+
+def test_hymba_long_mode_ring_cache():
+    """long_500k: hybrid cache is the sliding window, not the full context."""
+    cfg = get_arch("hymba-1.5b")
+    model = build_model(cfg)
+    st = model.init_decode_state(1, 524288, abstract=True)
+    assert st.cache_k.shape[2] == cfg.sliding_window
+
+
+def test_int8_kv_cache_decode_fidelity():
+    """FxP8 (Q3.4) KV cache: decode logits stay faithful to the bf16 cache
+    (the #Perf decode hillclimb's accuracy leg)."""
+    cfg16 = get_arch("glm4-9b").reduced().scaled(dtype="float32")
+    cfg8 = cfg16.scaled(kv_cache_bits=8)
+    m16, m8 = build_model(cfg16), build_model(cfg8)
+    params = m16.init(jax.random.PRNGKey(0))
+    batch = m16.make_batch(jax.random.PRNGKey(1), 2, 15, "prefill")
+    last = {"tokens": jnp.zeros((2, 1), jnp.int32)}
+    _, st16 = m16.prefill(params, batch)
+    _, st8 = m8.prefill(params, batch)
+    assert st8.cache_k.dtype == jnp.int8
+    l16, _ = m16.decode_step(params, st16, last)
+    l8, _ = m8.decode_step(params, st8, last)
+    a = np.asarray(l16.astype(jnp.float32)).ravel()
+    b = np.asarray(l8.astype(jnp.float32)).ravel()
+    assert np.corrcoef(a, b)[0, 1] > 0.99
+
+
+def test_fused_moe_ffn_matches_unfused():
+    """arctic's fused dense-FFN+MoE psum == separate computation (local)."""
+    cfg = get_arch("arctic-480b").reduced().scaled(dtype="float32")
+    cfg_f = cfg.scaled(fuse_moe_ffn_ar=True)
+    m, mf = build_model(cfg), build_model(cfg_f)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = m.make_batch(jax.random.PRNGKey(1), 2, 16, "train")
+    a = np.asarray(m.forward(params, batch))
+    b = np.asarray(mf.forward(params, batch))
+    np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-4)
