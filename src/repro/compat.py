@@ -1,0 +1,79 @@
+"""Version shims for the jax APIs this repo depends on.
+
+The repo targets the Pallas/TPU toolchain, whose public surface has moved
+between jax releases.  Everything that is version-sensitive resolves here,
+once, so kernels and models import stable names:
+
+  * ``shard_map`` — promoted out of ``jax.experimental`` in newer jax;
+    we try ``jax.shard_map`` first, then fall back to
+    ``jax.experimental.shard_map.shard_map``.  The replication-check
+    kwarg also renamed (``check_rep`` -> ``check_vma``); callers write
+    the new name and the shim translates for old jax.
+  * ``TPUCompilerParams`` — renamed to ``pltpu.CompilerParams`` in newer
+    jax; older releases only have ``pltpu.TPUCompilerParams``.
+  * ``cost_analysis`` — ``Compiled.cost_analysis()`` returns a one-element
+    list of dicts on older jax, a plain dict on newer; normalise to dict.
+
+Keep this module dependency-free (jax only) so it can be imported from
+anywhere in the tree without cycles.
+"""
+from __future__ import annotations
+
+
+def _resolve_shard_map():
+    """Prefer the stable ``jax.shard_map``, fall back to experimental."""
+    import jax
+
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm
+    from jax.experimental.shard_map import shard_map as sm
+    return sm
+
+
+def _adapt_shard_map(sm):
+    """Translate the ``check_vma`` kwarg for jax that only knows
+    ``check_rep`` (or neither)."""
+    import functools
+    import inspect
+
+    try:
+        params = inspect.signature(sm).parameters
+    except (TypeError, ValueError):
+        return sm
+    if "check_vma" in params:
+        return sm
+
+    @functools.wraps(sm)
+    def wrapper(*args, **kwargs):
+        if "check_vma" in kwargs:
+            val = kwargs.pop("check_vma")
+            if "check_rep" in params:
+                kwargs["check_rep"] = val
+        return sm(*args, **kwargs)
+
+    return wrapper
+
+
+def _resolve_tpu_compiler_params():
+    """``pltpu.CompilerParams`` (new name) or ``pltpu.TPUCompilerParams``."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cp = getattr(pltpu, "CompilerParams", None)
+    if cp is not None:
+        return cp
+    return pltpu.TPUCompilerParams
+
+
+def cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a dict across jax versions."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
+shard_map = _adapt_shard_map(_resolve_shard_map())
+TPUCompilerParams = _resolve_tpu_compiler_params()
+
+__all__ = ["shard_map", "TPUCompilerParams", "cost_analysis"]

@@ -1,3 +1,22 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernel families, all dispatching through the shared substrate.
+
+Importing this package registers every family in
+:mod:`repro.kernels.common`'s :class:`~repro.kernels.common.KernelSpec`
+registry and re-exports the public float-frontend ops.  Each family lives
+in its own subpackage as ``kernel.py`` (raw Pallas entry point) +
+``ref.py`` (oracle) + ``ops.py`` (jit'd wrapper) — the contract is
+documented in ``docs/KERNELS.md``.
+"""
+from repro.kernels.common import (KernelSpec, get_kernel, register,
+                                  registered_kernels)
+from repro.kernels.cordic_act.ops import cordic_act
+from repro.kernels.cordic_mac.ops import cordic_matmul
+from repro.kernels.cordic_softmax.ops import cordic_softmax
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.wkv.ops import wkv
+
+__all__ = [
+    "KernelSpec", "get_kernel", "register", "registered_kernels",
+    "cordic_act", "cordic_matmul", "cordic_softmax", "flash_attention",
+    "wkv",
+]

@@ -1,0 +1,264 @@
+"""Shared kernel substrate: the one dispatch layer under all five families.
+
+The paper's RPE is a *single* reconfigurable datapath that serves MAC,
+tanh/sigmoid, and SoftMax workloads; this module is the software analogue.
+Every kernel family (``cordic_act``, ``cordic_mac``, ``cordic_softmax``,
+``flash_attention``, ``wkv``) routes its public wrapper through here for:
+
+  * **platform policy** — :func:`platform` / :func:`on_tpu` /
+    :func:`resolve_interpret`: Pallas kernels compile on TPU and run in
+    interpret mode everywhere else (the CPU fallback), overridable with
+    ``REPRO_KERNEL_INTERPRET=0|1``.
+  * **compiler params** — :func:`compiler_params` wraps the
+    CompilerParams/TPUCompilerParams rename (see :mod:`repro.compat`).
+  * **block sizing** — :func:`largest_divisor` / :func:`pick_block_2d` /
+    :func:`pick_block_matmul`, all answering from a per-(kernel, shape,
+    dtype) cache that :func:`autotune` can overwrite with measured winners.
+  * **registry** — :class:`KernelSpec` maps a family name to its raw Pallas
+    entry point, its bit/numeric oracle from ``ref.py``, and the float
+    function whose exact VJP is the backward pass.
+  * **gradients** — :func:`ste` packages the straight-through custom_vjp
+    pattern (quantized forward, exact float backward) that every family
+    used to hand-roll.
+
+Adding a new family?  Read ``docs/KERNELS.md``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+import time
+from typing import Any, Callable, Dict, Iterable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import compat
+from repro.core.caesar import pick_block_shape
+
+# ---------------------------------------------------------------------------
+# Platform policy
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def platform() -> str:
+    """Primary accelerator platform: 'tpu', 'gpu' or 'cpu'."""
+    try:
+        return jax.devices()[0].platform
+    except RuntimeError:
+        return "cpu"
+
+
+def on_tpu() -> bool:
+    return platform() == "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """The CPU-fallback policy shared by every family.
+
+    Explicit ``interpret=`` wins; else ``REPRO_KERNEL_INTERPRET=0|1`` (force
+    compile under a TPU simulator / force interpret while debugging on
+    device); else interpret everywhere except real TPUs.
+    """
+    if interpret is not None:
+        return interpret
+    env = os.environ.get("REPRO_KERNEL_INTERPRET")
+    if env is not None:
+        return env.lower() not in ("0", "false", "no")
+    return not on_tpu()
+
+
+def compiler_params(*dimension_semantics: str):
+    """TPU compiler params across the CompilerParams rename."""
+    return compat.TPUCompilerParams(
+        dimension_semantics=tuple(dimension_semantics))
+
+
+# ---------------------------------------------------------------------------
+# Block sizing + autotune cache
+# ---------------------------------------------------------------------------
+
+# (kernel name, shape tuple, dtype name) -> chosen block tuple
+_BLOCK_CACHE: Dict[Tuple[str, Tuple[int, ...], str], Tuple[int, ...]] = {}
+
+
+def _cache_key(kernel: str, shape: Sequence[int], dtype: Any
+               ) -> Tuple[str, Tuple[int, ...], str]:
+    return (kernel, tuple(int(s) for s in shape), jnp.dtype(dtype).name)
+
+
+def clear_block_cache() -> None:
+    _BLOCK_CACHE.clear()
+
+
+def cached_block(kernel: str, shape: Sequence[int], dtype: Any
+                 ) -> Optional[Tuple[int, ...]]:
+    return _BLOCK_CACHE.get(_cache_key(kernel, shape, dtype))
+
+
+def set_block(kernel: str, shape: Sequence[int], dtype: Any,
+              block: Sequence[int]) -> None:
+    _BLOCK_CACHE[_cache_key(kernel, shape, dtype)] = tuple(block)
+
+
+def largest_divisor(n: int, cap: int) -> int:
+    """Largest d with 1 <= d <= cap and n % d == 0."""
+    d = max(1, min(int(cap), int(n)))
+    while n % d:
+        d -= 1
+    return d
+
+
+def pick_block_2d(kernel: str, shape: Tuple[int, int], dtype: Any = jnp.int32,
+                  max_rows: int = 256, max_cols: int = 512) -> Tuple[int, int]:
+    """Divisor-aware (rows, cols) tile for an elementwise/row-wise kernel.
+
+    Pallas BlockSpecs here require tiles that divide the array exactly, so
+    both sides shrink to the largest divisor under the cap.  The answer is
+    cached per (kernel, shape, dtype); :func:`autotune` results take
+    precedence.
+    """
+    hit = cached_block(kernel, shape, dtype)
+    if hit is not None:
+        return hit  # type: ignore[return-value]
+    r, c = shape
+    block = (largest_divisor(r, max_rows), largest_divisor(c, max_cols))
+    set_block(kernel, shape, dtype, block)
+    return block
+
+
+def pick_block_rows(kernel: str, shape: Tuple[int, int],
+                    dtype: Any = jnp.int32, max_rows: int = 128) -> int:
+    """Row-block for kernels that keep the feature axis whole (softmax)."""
+    hit = cached_block(kernel, shape, dtype)
+    if hit is not None:
+        return hit[0]
+    br = largest_divisor(shape[0], max_rows)
+    set_block(kernel, shape, dtype, (br, shape[1]))
+    return br
+
+
+def pick_block_matmul(kernel: str, m: int, n: int, k: int,
+                      dtype: Any = jnp.int32, max_block: int = 256
+                      ) -> Tuple[int, int, int]:
+    """(bm, bn, bk) for an output-stationary matmul via the CAESAR
+    VMEM-budget model (callers pad, so the block need not divide)."""
+    hit = cached_block(kernel, (m, n, k), dtype)
+    if hit is not None:
+        return hit  # type: ignore[return-value]
+    block = pick_block_shape(m, n, k,
+                             bytes_per_el=jnp.dtype(dtype).itemsize,
+                             max_block=max_block)
+    set_block(kernel, (m, n, k), dtype, block)
+    return block
+
+
+def autotune(kernel: str, shape: Sequence[int], dtype: Any,
+             candidates: Iterable[Sequence[int]],
+             run: Callable[[Tuple[int, ...]], Any],
+             repeats: int = 3) -> Tuple[int, ...]:
+    """Measure ``run(block)`` per candidate; cache and return the winner.
+
+    Each candidate gets one untimed call (compile/warmup) and ``repeats``
+    timed calls.  Candidates that raise (e.g. VMEM overflow on device) are
+    skipped.  The winner lands in the block cache under
+    (kernel, shape, dtype), so the ``pick_block_*`` helpers serve it to
+    every later trace of the same problem.
+    """
+    best: Optional[Tuple[int, ...]] = None
+    best_t = float("inf")
+    for cand in candidates:
+        blk = tuple(int(b) for b in cand)
+        try:
+            jax.block_until_ready(run(blk))
+            t0 = time.perf_counter()
+            out = None
+            for _ in range(repeats):
+                out = run(blk)
+            jax.block_until_ready(out)
+            dt = (time.perf_counter() - t0) / max(1, repeats)
+        except Exception:
+            continue
+        if dt < best_t:
+            best, best_t = blk, dt
+    if best is None:
+        raise ValueError(f"autotune({kernel!r}): no candidate ran")
+    set_block(kernel, shape, dtype, best)
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Kernel registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """One kernel family, as the substrate sees it.
+
+    kernel: the raw Pallas entry point (tiled, takes ``interpret=``).
+    ref:    the oracle from the family's ``ref.py`` — bit-exact for the
+            fixed-point families, float-allclose for flash/wkv.
+    grad:   float function whose exact VJP is the backward pass (STE);
+            None for forward-only families.
+    tags:   free-form labels ("fixed-point", "attention", ...).
+    """
+    name: str
+    kernel: Callable[..., Any]
+    ref: Callable[..., Any]
+    grad: Optional[Callable[..., Any]] = None
+    tags: Tuple[str, ...] = ()
+
+
+_REGISTRY: Dict[str, KernelSpec] = {}
+
+
+def register(spec: KernelSpec) -> KernelSpec:
+    """Idempotent by name (module re-imports re-register the same spec)."""
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get_kernel(name: str) -> KernelSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"no kernel {name!r} registered; known: {registered_kernels()} "
+            "(import repro.kernels to populate the registry)") from None
+
+
+def registered_kernels() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# Straight-through gradients
+# ---------------------------------------------------------------------------
+
+
+def ste(fwd: Callable[..., jax.Array],
+        grad: Callable[..., jax.Array]) -> Callable[..., jax.Array]:
+    """custom_vjp wrapper: quantized forward, exact float backward.
+
+    ``fwd`` runs the (non-differentiable) kernel; the backward pass is the
+    exact VJP of ``grad`` evaluated at the primal inputs — straight-through
+    estimation.  All static configuration must already be bound into both
+    callables; the returned function takes arrays only.
+    """
+
+    @jax.custom_vjp
+    def f(*args):
+        return fwd(*args)
+
+    def f_fwd(*args):
+        return fwd(*args), args
+
+    def f_bwd(args, g):
+        _, vjp = jax.vjp(grad, *args)
+        return vjp(g)
+
+    f.defvjp(f_fwd, f_bwd)
+    return f

@@ -23,10 +23,10 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import cordic, fixed_point as fxp
 from repro.core.fixed_point import FxpFormat
+from repro.kernels import common
 
 LN2 = math.log(2.0)
 GUARD_BITS = 4
@@ -136,7 +136,6 @@ def cordic_act_raw(x_raw: jax.Array, *, af: str, fmt: FxpFormat,
         in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j))],
         out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((r, c), jnp.int32),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel")),
+        compiler_params=common.compiler_params("parallel", "parallel"),
         interpret=interpret,
     )(x_raw)

@@ -2,41 +2,29 @@
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import cordic, fixed_point as fxp
 from repro.core.fixed_point import FxpFormat
+from repro.kernels import common
 from repro.kernels.cordic_act.kernel import cordic_act_raw
-
-_ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+from repro.kernels.cordic_act.ref import cordic_act_raw_ref
 
 _EXACT = {"tanh": jnp.tanh, "sigmoid": jax.nn.sigmoid, "exp": jnp.exp}
 
 
-def _pick_block(r: int, c: int) -> Tuple[int, int]:
-    br = r if r < 256 else 256
-    bc = c if c < 512 else 512
-    # shrink to divisors
-    while r % br:
-        br -= 1
-    while c % bc:
-        bc -= 1
-    return br, bc
-
-
 @functools.partial(jax.jit, static_argnames=("af", "fmt", "n_hyp", "n_div",
-                                             "guard", "interpret"))
+                                             "guard", "block", "interpret"))
 def _fwd(x, af: str, fmt: FxpFormat, n_hyp: int, n_div: int, guard: int,
-         interpret: bool):
+         block, interpret: bool):
     shape = x.shape
     x2 = x.reshape(-1, shape[-1]) if x.ndim != 2 else x
     raw = fxp.quantize(x2, fmt)
     out = cordic_act_raw(raw, af=af, fmt=fmt, n_hyp=n_hyp, n_div=n_div,
-                         guard=guard, block=_pick_block(*x2.shape),
-                         interpret=interpret)
+                         guard=guard, block=block, interpret=interpret)
     return fxp.dequantize(out, fmt).reshape(shape).astype(x.dtype)
 
 
@@ -45,21 +33,28 @@ def cordic_act(x: jax.Array, af: str, *, fmt: FxpFormat = fxp.FXP16,
                n_div: Optional[int] = None, guard: int = 4,
                interpret: Optional[bool] = None) -> jax.Array:
     """tanh/sigmoid/exp through the DA-VINCI kernel, STE gradients."""
-    if interpret is None:
-        interpret = not _ON_TPU
+    if af not in _EXACT:
+        raise ValueError(f"unsupported af {af!r}; kernel AFs: "
+                         f"{sorted(_EXACT)} (composites like gelu live in "
+                         "core/activations.py)")
+    interpret = common.resolve_interpret(interpret)
     if n_div is None:
         n_div = max(cordic.N_DIVISION_STAGES, fmt.frac_bits + guard)
-
-    @jax.custom_vjp
-    def f(v):
-        return _fwd(v, af, fmt, n_hyp, n_div, guard, interpret)
-
-    def fwd(v):
-        return f(v), v
-
-    def bwd(v, g):
-        _, vjp = jax.vjp(_EXACT[af], v)
-        return vjp(g)
-
-    f.defvjp(fwd, bwd)
+    # Pick the block OUTSIDE the jitted forward so autotuned cache entries
+    # take effect (a lookup inside _fwd would be frozen into its trace).
+    x2_shape = (x.size // x.shape[-1], x.shape[-1])
+    block = common.pick_block_2d(f"cordic_act.{af}", x2_shape, jnp.int32)
+    f = common.ste(
+        functools.partial(_fwd, af=af, fmt=fmt, n_hyp=n_hyp, n_div=n_div,
+                          guard=guard, block=block, interpret=interpret),
+        _EXACT[af])
     return f(x)
+
+
+def _exact_act(x: jax.Array, *, af: str) -> jax.Array:
+    return _EXACT[af](x)
+
+
+common.register(common.KernelSpec(
+    name="cordic_act", kernel=cordic_act_raw, ref=cordic_act_raw_ref,
+    grad=_exact_act, tags=("fixed-point", "elementwise")))

@@ -25,10 +25,10 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import fixed_point as fxp
 from repro.core.fixed_point import FxpFormat
+from repro.kernels import common
 
 
 def _mac_kernel(x_ref, w_ref, out_ref, *, n_stages: int, fmt: FxpFormat,
@@ -84,7 +84,7 @@ def cordic_matmul_raw(x_raw: jax.Array, w_raw: jax.Array, *,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        compiler_params=common.compiler_params("parallel", "parallel",
+                                               "arbitrary"),
         interpret=interpret,
     )(x_raw, w_raw)

@@ -13,11 +13,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import fixed_point as fxp
-from repro.core.caesar import pick_block_shape
 from repro.core.fixed_point import FxpFormat
+from repro.kernels import common
 from repro.kernels.cordic_mac.kernel import cordic_matmul_raw
-
-_ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+from repro.kernels.cordic_mac.ref import cordic_matmul_raw_ref
 
 
 def _pad_to(a: jax.Array, m0: int, m1: int) -> jax.Array:
@@ -41,6 +40,10 @@ def _fwd(x, w, fmt: FxpFormat, n_stages: int,
     return fxp.dequantize(out_raw[:m, :n], fmt)
 
 
+def _exact_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    return x @ w
+
+
 def cordic_matmul(x: jax.Array, w: jax.Array, *, fmt: FxpFormat = fxp.FXP16,
                   n_stages: int = 5,
                   block: Optional[Tuple[int, int, int]] = None,
@@ -50,24 +53,20 @@ def cordic_matmul(x: jax.Array, w: jax.Array, *, fmt: FxpFormat = fxp.FXP16,
     Differentiable via straight-through estimation: forward is the
     bit-accurate systolic kernel, backward is the exact matmul VJP.
     """
-    if interpret is None:
-        interpret = not _ON_TPU
+    interpret = common.resolve_interpret(interpret)
     if block is None:
         m, k = x.shape
         n = w.shape[1]
         # int32 raw words => 4 bytes/element in VMEM.
-        block = pick_block_shape(m, n, k, bytes_per_el=4, max_block=256)
-
-    @jax.custom_vjp
-    def f(x_, w_):
-        return _fwd(x_, w_, fmt, n_stages, block, interpret)
-
-    def fwd(x_, w_):
-        return f(x_, w_), (x_, w_)
-
-    def bwd(res, g):
-        x_, w_ = res
-        return (g @ w_.T).astype(x_.dtype), (x_.T @ g).astype(w_.dtype)
-
-    f.defvjp(fwd, bwd)
+        block = common.pick_block_matmul("cordic_mac", m, n, k,
+                                         dtype=jnp.int32, max_block=256)
+    f = common.ste(
+        functools.partial(_fwd, fmt=fmt, n_stages=n_stages, block=block,
+                          interpret=interpret),
+        _exact_matmul)
     return f(x, w)
+
+
+common.register(common.KernelSpec(
+    name="cordic_mac", kernel=cordic_matmul_raw, ref=cordic_matmul_raw_ref,
+    grad=_exact_matmul, tags=("fixed-point", "matmul")))

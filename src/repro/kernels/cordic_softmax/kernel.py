@@ -22,10 +22,10 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import cordic, fixed_point as fxp
 from repro.core.fixed_point import FxpFormat
+from repro.kernels import common
 from repro.kernels.cordic_act.kernel import (EXP_ARG_CLAMP, GUARD_BITS,
                                              _divide, _exp_neg, _round_back)
 
@@ -52,9 +52,7 @@ def cordic_softmax_raw(x_raw: jax.Array, *, fmt: FxpFormat,
                        interpret: bool = True) -> jax.Array:
     assert fmt.frac_bits + guard <= 12, "internal precision capped at Q12"
     r, c = x_raw.shape
-    br = min(block_rows, r)
-    while r % br:
-        br -= 1
+    br = common.largest_divisor(r, block_rows)
     kernel = functools.partial(_softmax_kernel, fmt=fmt, n_hyp=n_hyp,
                                n_div=n_div, guard=guard)
     return pl.pallas_call(
@@ -63,7 +61,6 @@ def cordic_softmax_raw(x_raw: jax.Array, *, fmt: FxpFormat,
         in_specs=[pl.BlockSpec((br, c), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((br, c), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((r, c), jnp.int32),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel",)),
+        compiler_params=common.compiler_params("parallel"),
         interpret=interpret,
     )(x_raw)

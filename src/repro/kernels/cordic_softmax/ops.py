@@ -9,15 +9,16 @@ import jax.numpy as jnp
 
 from repro.core import cordic, fixed_point as fxp
 from repro.core.fixed_point import FxpFormat
+from repro.kernels import common
 from repro.kernels.cordic_softmax.kernel import cordic_softmax_raw
-
-_ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+from repro.kernels.cordic_softmax.ref import cordic_softmax_raw_ref
 
 
 @functools.partial(jax.jit, static_argnames=("fmt", "n_hyp", "n_div",
-                                             "guard", "interpret"))
+                                             "guard", "block_rows",
+                                             "interpret"))
 def _fwd(x, fmt: FxpFormat, n_hyp: int, n_div: int, guard: int,
-         interpret: bool):
+         block_rows: int, interpret: bool):
     shape = x.shape
     x2 = x.reshape(-1, shape[-1])
     # Pre-scale into fmt range: softmax(x) == softmax(x - max) and the
@@ -26,8 +27,13 @@ def _fwd(x, fmt: FxpFormat, n_hyp: int, n_div: int, guard: int,
     x2 = x2 - jax.lax.stop_gradient(jnp.max(x2, axis=-1, keepdims=True))
     raw = fxp.quantize(x2, fmt)
     out = cordic_softmax_raw(raw, fmt=fmt, n_hyp=n_hyp, n_div=n_div,
-                             guard=guard, interpret=interpret)
+                             guard=guard, block_rows=block_rows,
+                             interpret=interpret)
     return fxp.dequantize(out, fmt).reshape(shape).astype(x.dtype)
+
+
+def _exact_softmax(x: jax.Array) -> jax.Array:
+    return jax.nn.softmax(x, axis=-1)
 
 
 def cordic_softmax(x: jax.Array, *, fmt: FxpFormat = fxp.FXP16,
@@ -35,21 +41,22 @@ def cordic_softmax(x: jax.Array, *, fmt: FxpFormat = fxp.FXP16,
                    n_div: Optional[int] = None, guard: int = 4,
                    interpret: Optional[bool] = None) -> jax.Array:
     """Row softmax through the RPE FIFO datapath, STE gradients."""
-    if interpret is None:
-        interpret = not _ON_TPU
+    interpret = common.resolve_interpret(interpret)
     if n_div is None:
         n_div = max(cordic.N_DIVISION_STAGES, fmt.frac_bits + guard)
-
-    @jax.custom_vjp
-    def f(v):
-        return _fwd(v, fmt, n_hyp, n_div, guard, interpret)
-
-    def fwd(v):
-        return f(v), v
-
-    def bwd(v, g):
-        _, vjp = jax.vjp(lambda t: jax.nn.softmax(t, axis=-1), v)
-        return vjp(g)
-
-    f.defvjp(fwd, bwd)
+    # Pick the block OUTSIDE the jitted forward so autotuned cache entries
+    # take effect (a lookup inside _fwd would be frozen into its trace).
+    x2_shape = (x.size // x.shape[-1], x.shape[-1])
+    block_rows = common.pick_block_rows("cordic_softmax", x2_shape, jnp.int32)
+    f = common.ste(
+        functools.partial(_fwd, fmt=fmt, n_hyp=n_hyp, n_div=n_div,
+                          guard=guard, block_rows=block_rows,
+                          interpret=interpret),
+        _exact_softmax)
     return f(x)
+
+
+common.register(common.KernelSpec(
+    name="cordic_softmax", kernel=cordic_softmax_raw,
+    ref=cordic_softmax_raw_ref, grad=_exact_softmax,
+    tags=("fixed-point", "rowwise")))

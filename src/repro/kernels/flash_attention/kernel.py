@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import common
+
 NEG_INF = -1e30
 
 
@@ -80,9 +82,8 @@ def flash_attention_nhd(q: jax.Array, k: jax.Array, v: jax.Array, *,
     hq, sq, d = q.shape
     hkv, sk, _ = k.shape
     assert hq == group * hkv, (hq, hkv, group)
-    bq = min(block_q, sq)
-    bk = min(block_k, sk)
-    assert sq % bq == 0 and sk % bk == 0
+    bq = common.largest_divisor(sq, block_q)
+    bk = common.largest_divisor(sk, block_k)
     nk = sk // bk
     grid = (hq, sq // bq, nk)
     kernel = functools.partial(_flash_kernel, bq=bq, bk=bk,
@@ -102,7 +103,7 @@ def flash_attention_nhd(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pltpu.VMEM((bq,), jnp.float32),
             pltpu.VMEM((bq, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        compiler_params=common.compiler_params("parallel", "parallel",
+                                               "arbitrary"),
         interpret=interpret,
     )(q, k, v)

@@ -7,30 +7,50 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import common
 from repro.kernels.flash_attention.kernel import flash_attention_nhd
-
-_ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+from repro.kernels.flash_attention.ref import attention_nhd_ref
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
                                              "interpret"))
+def _fwd(q, k, v, causal: bool, block_q: int, block_k: int, interpret: bool):
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    group = hq // hkv
+    return jax.vmap(
+        lambda qq, kk, vv: flash_attention_nhd(
+            qq, kk, vv, causal=causal, block_q=block_q, block_k=block_k,
+            group=group, interpret=interpret)
+    )(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+      v.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
+
+
+def _exact_attention(q, k, v, *, causal: bool):
+    """Materialised-scores float reference on the (B, S, H, d) layout —
+    the STE backward (exact attention VJP, O(S^2) memory)."""
+    group = q.shape[2] // k.shape[2]
+    return jax.vmap(
+        lambda qq, kk, vv: attention_nhd_ref(qq, kk, vv, causal=causal,
+                                             group=group)
+    )(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+      v.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
+
+
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, block_q: int = 128,
                     block_k: int = 128,
                     interpret: Optional[bool] = None) -> jax.Array:
     """q: (B, Sq, Hq, d); k/v: (B, Sk, Hkv, d).  Returns (B, Sq, Hq, d)."""
-    if interpret is None:
-        interpret = not _ON_TPU
-    b, sq, hq, d = q.shape
-    _, sk, hkv, _ = k.shape
-    group = hq // hkv
-    qn = q.transpose(0, 2, 1, 3).reshape(b * hq, sq, d)
-    kn = k.transpose(0, 2, 1, 3).reshape(b * hkv, sk, d)
-    vn = v.transpose(0, 2, 1, 3).reshape(b * hkv, sk, d)
-    out = jax.vmap(
-        lambda qq, kk, vv: flash_attention_nhd(
-            qq, kk, vv, causal=causal, block_q=block_q, block_k=block_k,
-            group=group, interpret=interpret)
-    )(qn.reshape(b, hq, sq, d), kn.reshape(b, hkv, sk, d),
-      vn.reshape(b, hkv, sk, d))
-    return out.transpose(0, 2, 1, 3)
+    interpret = common.resolve_interpret(interpret)
+    f = common.ste(
+        functools.partial(_fwd, causal=causal, block_q=block_q,
+                          block_k=block_k, interpret=interpret),
+        functools.partial(_exact_attention, causal=causal))
+    return f(q, k, v)
+
+
+common.register(common.KernelSpec(
+    name="flash_attention", kernel=flash_attention_nhd,
+    ref=attention_nhd_ref, grad=_exact_attention,
+    tags=("float", "attention")))

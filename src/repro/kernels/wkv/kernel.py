@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import common
+
 
 def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_scr, *, bt: int):
     @pl.when(pl.program_id(1) == 0)
@@ -60,8 +62,7 @@ def wkv_recurrence(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
     """
     bh, t, dk = r.shape
     dv = v.shape[-1]
-    bt = min(block_t, t)
-    assert t % bt == 0
+    bt = common.largest_divisor(t, block_t)
     grid = (bh, t // bt)
     kernel = functools.partial(_wkv_kernel, bt=bt)
     return pl.pallas_call(
@@ -77,7 +78,6 @@ def wkv_recurrence(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
         out_specs=pl.BlockSpec((1, bt, dv), lambda b, i: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, t, dv), r.dtype),
         scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
+        compiler_params=common.compiler_params("parallel", "arbitrary"),
         interpret=interpret,
     )(r, k, v, w, u.reshape(bh, 1, dk))

@@ -7,22 +7,44 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import common
 from repro.kernels.wkv.kernel import wkv_recurrence
+from repro.kernels.wkv.ref import wkv_recurrence_ref
 
-_ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+
+def _flat(x):
+    b, t, h, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b * h, t, d)
 
 
 @functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def _fwd(r, k, v, w, u, block_t: int, interpret: bool):
+    b, t, h, d = r.shape
+    uu = jnp.tile(u[None], (b, 1, 1)).reshape(b * h, d)
+    out = wkv_recurrence(_flat(r), _flat(k), _flat(v), _flat(w), uu,
+                         block_t=block_t, interpret=interpret)
+    return out.reshape(b, h, t, d).transpose(0, 2, 1, 3)
+
+
+def _exact_wkv(r, k, v, w, u):
+    """Float scan reference on the (B, T, H, d) layout — the STE backward."""
+    b, t, h, d = r.shape
+    uu = jnp.tile(u[None], (b, 1, 1)).reshape(b * h, d)
+    out = wkv_recurrence_ref(_flat(r), _flat(k), _flat(v), _flat(w), uu)
+    return out.reshape(b, h, t, d).transpose(0, 2, 1, 3)
+
+
 def wkv(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
         u: jax.Array, *, block_t: int = 64,
         interpret: Optional[bool] = None) -> jax.Array:
     """r/k/v/w: (B, T, H, d); u: (H, d).  Returns (B, T, H, d)."""
-    if interpret is None:
-        interpret = not _ON_TPU
-    b, t, h, d = r.shape
-    def flat(x):
-        return x.transpose(0, 2, 1, 3).reshape(b * h, t, d)
-    uu = jnp.tile(u[None], (b, 1, 1)).reshape(b * h, d)
-    out = wkv_recurrence(flat(r), flat(k), flat(v), flat(w), uu,
-                         block_t=block_t, interpret=interpret)
-    return out.reshape(b, h, t, d).transpose(0, 2, 1, 3)
+    interpret = common.resolve_interpret(interpret)
+    f = common.ste(
+        functools.partial(_fwd, block_t=block_t, interpret=interpret),
+        _exact_wkv)
+    return f(r, k, v, w, u)
+
+
+common.register(common.KernelSpec(
+    name="wkv", kernel=wkv_recurrence, ref=wkv_recurrence_ref,
+    grad=_exact_wkv, tags=("float", "recurrent")))

@@ -21,6 +21,7 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as PS  # noqa: E402
 
+from repro import compat  # noqa: E402
 from repro.analysis import roofline  # noqa: E402
 from repro.analysis.costmodel import MeshSpec  # noqa: E402
 from repro.configs import ARCHS, LM_SHAPES, get_arch, shape_applicable  # noqa: E402
@@ -267,7 +268,7 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
                 lowered = fn.lower(*args)
                 compiled = lowered.compile()
             mem = compiled.memory_analysis()
-            cost = compiled.cost_analysis()
+            cost = compat.cost_analysis(compiled)
             hlo_text = compiled.as_text() if with_hlo else None
     except Exception as e:
         return {"arch": arch_name, "shape": shape_name, "mesh": mesh_tag,

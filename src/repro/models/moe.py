@@ -30,8 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as PS
 
-from jax import shard_map
-
+from repro.compat import shard_map
 from repro.configs.base import ArchConfig, ExecutionPolicy
 from repro.models import layers as L
 from repro.parallel.sharding import constrain, get_abstract_mesh

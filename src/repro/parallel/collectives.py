@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as PS
 
-from jax import shard_map
+from repro.compat import shard_map
 
 Array = jax.Array
 
