@@ -9,6 +9,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * caesar_*    - Table 3 VGG-16 mapping + pruning co-design speedups
   * accuracy_*  - Fig 11 accuracy under CORDIC execution (+QAT recovery)
   * roofline_*  - roofline terms for representative (arch x shape) cells
+  * tune_*      - kernel tile-candidate sweep (smoke), heuristic vs tuned;
+                  writes the persistent tuned table (REPRO_TUNE_CACHE).
+                  Full sweep: ``python -m benchmarks.tune``.
 """
 from __future__ import annotations
 
@@ -20,17 +23,18 @@ import traceback
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="pareto|mac|caesar|accuracy|roofline")
+                    help="pareto|mac|caesar|accuracy|roofline|tune")
     args = ap.parse_args(argv)
 
     from benchmarks import (accuracy_bench, caesar_bench, mac_bench,
-                            pareto_bench, roofline_bench)
+                            pareto_bench, roofline_bench, tune_bench)
     suites = {
         "pareto": pareto_bench.run,
         "mac": mac_bench.run,
         "caesar": caesar_bench.run,
         "accuracy": accuracy_bench.run,
         "roofline": roofline_bench.run,
+        "tune": tune_bench.run,
     }
     if args.only:
         suites = {args.only: suites[args.only]}

@@ -1,0 +1,12 @@
+"""``python -m benchmarks.tune`` — the tuning-sweep CLI.
+
+Thin alias for :mod:`benchmarks.tune_bench` (which also registers as the
+``tune`` suite of ``benchmarks/run.py``)."""
+from __future__ import annotations
+
+import sys
+
+from benchmarks.tune_bench import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,244 @@
+"""Tuning sweep: measure tile candidates per kernel family, persist winners.
+
+    PYTHONPATH=src python -m benchmarks.tune [--smoke] [--out BENCH_kernels.json]
+
+For every registered kernel family this sweeps the family's own
+``KernelSpec.candidates(shape, dtype)`` tile candidates over representative
+shapes (derived from the ``repro.configs`` registry; a tiny fixed set with
+``--smoke``), using :func:`repro.kernels.common.autotune` for the
+per-candidate timing.  Two artifacts come out:
+
+  * the **persistent tuned table** (``REPRO_TUNE_CACHE`` / XDG default, or
+    ``--cache``), which any later process — serving included — loads
+    through the substrate's three-level block lookup, and
+  * ``BENCH_kernels.json``: us_per_call per (family, shape), heuristic vs
+    tuned, so the repo has a tracked perf trajectory.
+
+Also registered as the ``tune`` suite of ``benchmarks/run.py`` (smoke
+sweep).  On CPU the kernels run in Pallas interpret mode, so absolute
+numbers are only comparable within a run; on TPU they are real.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.kernels as K
+from repro.kernels import common, tuning
+
+
+@dataclasses.dataclass
+class Problem:
+    """One (family, cache-key, shape) cell of the sweep.
+
+    ``call`` runs the public op with whatever block the substrate cache
+    currently serves — forcing a candidate is ``set_block`` + ``call``.
+    """
+    family: str
+    key: str                  # cache-key kernel name (per-AF for act)
+    shape: Tuple[int, ...]    # cache-key shape
+    dtype: Any
+    call: Callable[[], Any]
+
+
+def _timeit(f: Callable[[], Any], repeats: int) -> float:
+    """us per call; one untimed warmup, each timed call blocked on."""
+    jax.block_until_ready(f())
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        jax.block_until_ready(f())
+    return (time.perf_counter() - t0) / max(1, repeats) * 1e6
+
+
+def _shape_sets(smoke: bool) -> Dict[str, List[Tuple[int, ...]]]:
+    """Representative cache-key shapes per family.
+
+    Full mode derives them from the reduced architectures in the
+    ``repro.configs`` registry (the same shapes the tier-1 models trace);
+    smoke mode is one tiny cell per family, sized for CI's CPU interpret
+    mode.
+    """
+    if smoke:
+        return {
+            "cordic_act": [(32, 64)],
+            "cordic_softmax": [(16, 64)],
+            "cordic_mac": [(64, 64, 64)],
+            "flash_attention": [(32, 32, 2, 1, 8)],   # (sq, sk, hq, hkv, d)
+            "wkv": [(32, 2, 8)],                      # (t, h, d)
+        }
+    from repro.configs import ARCHS
+    acts, softs, macs, flashes, wkvs = set(), set(), set(), set(), set()
+    for cfg in (a.reduced() for a in ARCHS.values()):
+        tokens = 4 * cfg.attn_chunk
+        acts.add((tokens, cfg.d_ff))
+        softs.add((cfg.n_heads * tokens, tokens))
+        macs.add((tokens, cfg.d_ff, cfg.d_model))
+        flashes.add((tokens, tokens, cfg.n_heads,
+                     max(1, cfg.n_kv_heads), cfg.head_dim_))
+        if cfg.ssm_state:
+            wkvs.add((tokens, cfg.n_heads, cfg.head_dim_))
+    if not wkvs:
+        wkvs.add((64, 2, 8))
+    return {
+        "cordic_act": sorted(acts),
+        "cordic_softmax": sorted(softs),
+        "cordic_mac": sorted(macs),
+        "flash_attention": sorted(flashes),
+        "wkv": sorted(wkvs),
+    }
+
+
+def _problems(smoke: bool) -> List[Problem]:
+    rng = np.random.default_rng(0)
+    shapes = _shape_sets(smoke)
+    out: List[Problem] = []
+
+    for r, c in shapes["cordic_act"]:
+        x = jnp.array(rng.uniform(-2, 2, (r, c)), jnp.float32)
+        out.append(Problem("cordic_act", "cordic_act.tanh", (r, c),
+                           jnp.int32,
+                           lambda x=x: K.cordic_act(x, "tanh")))
+
+    for r, c in shapes["cordic_softmax"]:
+        x = jnp.array(rng.normal(size=(r, c)), jnp.float32)
+        out.append(Problem("cordic_softmax", "cordic_softmax", (r, c),
+                           jnp.int32, lambda x=x: K.cordic_softmax(x)))
+
+    for m, n, k in shapes["cordic_mac"]:
+        x = jnp.array(rng.uniform(-1, 1, (m, k)), jnp.float32)
+        w = jnp.array(rng.uniform(-1, 1, (k, n)), jnp.float32)
+        out.append(Problem("cordic_mac", "cordic_mac", (m, n, k), jnp.int32,
+                           lambda x=x, w=w: K.cordic_matmul(x, w)))
+
+    for sq, sk, hq, hkv, d in shapes["flash_attention"]:
+        q = jnp.array(rng.normal(size=(1, sq, hq, d)), jnp.float32)
+        kk = jnp.array(rng.normal(size=(1, sk, hkv, d)), jnp.float32)
+        v = jnp.array(rng.normal(size=(1, sk, hkv, d)), jnp.float32)
+        out.append(Problem("flash_attention", "flash_attention", (sq, sk),
+                           jnp.float32,
+                           lambda q=q, kk=kk, v=v: K.flash_attention(
+                               q, kk, v)))
+
+    for t, h, d in shapes["wkv"]:
+        r_ = jnp.array(rng.normal(size=(1, t, h, d)), jnp.float32)
+        k_ = jnp.array(rng.normal(size=(1, t, h, d)), jnp.float32)
+        v_ = jnp.array(rng.normal(size=(1, t, h, d)), jnp.float32)
+        w_ = jnp.array(rng.uniform(0.1, 0.9, (1, t, h, d)), jnp.float32)
+        u_ = jnp.array(rng.normal(size=(h, d)), jnp.float32)
+        out.append(Problem("wkv", "wkv", (t, d), jnp.float32,
+                           lambda r_=r_, k_=k_, v_=v_, w_=w_, u_=u_:
+                           K.wkv(r_, k_, v_, w_, u_)))
+    return out
+
+
+def sweep(smoke: bool = False, repeats: int = 3,
+          families: Optional[List[str]] = None,
+          cache_path: Optional[str] = None,
+          out_path: Optional[str] = None) -> Dict[str, Any]:
+    """Run the sweep; write the tuned table (+ optionally the report).
+
+    Returns the report dict (``meta`` + ``rows``).
+    """
+    # Empty the disk layer so the heuristic baseline really is the
+    # heuristic, not a previously persisted winner.
+    common.load_tuned_table(os.devnull)
+    problems = _problems(smoke)
+    if families:
+        problems = [p for p in problems if p.family in families]
+
+    table: tuning.Table = {}
+    rows: List[Dict[str, Any]] = []
+    for p in problems:
+        spec = common.get_kernel(p.family)
+        if spec.candidates is None:
+            continue
+        cands = tuple(tuple(int(b) for b in c)
+                      for c in spec.candidates(p.shape, p.dtype))
+        if not cands:
+            continue
+
+        common.clear_block_cache()
+        us_heur = _timeit(p.call, repeats)     # warmup installs heuristic
+        heur = common.cached_block(p.key, p.shape, p.dtype)
+
+        def run(blk, p=p):
+            common.set_block(p.key, p.shape, p.dtype, blk)
+            return p.call()
+
+        best = common.autotune(p.key, p.shape, p.dtype, cands, run,
+                               repeats=repeats)
+        us_tuned = _timeit(p.call, repeats)    # cache now serves the winner
+        key = (p.key, tuple(p.shape), jnp.dtype(p.dtype).name)
+        table[key] = best
+        rows.append({
+            "family": p.family, "kernel": p.key, "shape": list(p.shape),
+            "dtype": jnp.dtype(p.dtype).name,
+            "heuristic_block": list(heur) if heur else None,
+            "tuned_block": list(best), "n_candidates": len(cands),
+            "us_heuristic": round(us_heur, 1), "us_tuned": round(us_tuned, 1),
+        })
+
+    written = tuning.save(table, path=cache_path)
+    report = {
+        "meta": {**tuning.version_stamp(), "smoke": smoke,
+                 "repeats": repeats, "tuned_table": written},
+        "rows": rows,
+    }
+    if out_path:
+        with open(out_path, "w", encoding="utf-8") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+    return report
+
+
+def run(csv_rows):
+    """`benchmarks.run` suite entry: smoke sweep, CSV rows per cell."""
+    report = sweep(smoke=True, repeats=1)
+    for r in report["rows"]:
+        shape = "x".join(str(s) for s in r["shape"])
+        csv_rows.append((
+            f"tune_{r['kernel']}_{shape}", r["us_tuned"],
+            f"heuristic_us={r['us_heuristic']};"
+            f"block={'x'.join(str(b) for b in r['tuned_block'])}"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Sweep kernel tile candidates; persist the tuned table.")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, repeats=1 (CI lane)")
+    ap.add_argument("--repeats", type=int, default=None,
+                    help="timed calls per candidate (default 3; 1 in smoke)")
+    ap.add_argument("--families", default=None,
+                    help="comma-separated subset, e.g. cordic_mac,wkv")
+    ap.add_argument("--cache", default=None,
+                    help="tuned-table path (default REPRO_TUNE_CACHE / XDG)")
+    ap.add_argument("--out", default="BENCH_kernels.json",
+                    help="perf report path ('' to skip)")
+    args = ap.parse_args(argv)
+
+    repeats = args.repeats if args.repeats is not None else (
+        1 if args.smoke else 3)
+    fams = args.families.split(",") if args.families else None
+    report = sweep(smoke=args.smoke, repeats=repeats, families=fams,
+                   cache_path=args.cache, out_path=args.out or None)
+    print(f"# tuned table -> {report['meta']['tuned_table']}")
+    print("kernel,shape,us_heuristic,us_tuned,heuristic_block,tuned_block")
+    for r in report["rows"]:
+        print(f"{r['kernel']},{'x'.join(str(s) for s in r['shape'])},"
+              f"{r['us_heuristic']},{r['us_tuned']},"
+              f"{'x'.join(str(b) for b in (r['heuristic_block'] or []))},"
+              f"{'x'.join(str(b) for b in r['tuned_block'])}")
+    return 0 if report["rows"] else 1
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

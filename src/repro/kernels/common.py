@@ -12,8 +12,11 @@ Every kernel family (``cordic_act``, ``cordic_mac``, ``cordic_softmax``,
   * **compiler params** — :func:`compiler_params` wraps the
     CompilerParams/TPUCompilerParams rename (see :mod:`repro.compat`).
   * **block sizing** — :func:`largest_divisor` / :func:`pick_block_2d` /
-    :func:`pick_block_matmul`, all answering from a per-(kernel, shape,
-    dtype) cache that :func:`autotune` can overwrite with measured winners.
+    :func:`pick_block_matmul`, all answering through a three-level lookup:
+    the in-process per-(kernel, shape, dtype) cache (which
+    :func:`autotune` overwrites with measured winners), then the
+    persistent tuned table from :mod:`repro.kernels.tuning`, then the
+    shape heuristic.
   * **registry** — :class:`KernelSpec` maps a family name to its raw Pallas
     entry point, its bit/numeric oracle from ``ref.py``, and the float
     function whose exact VJP is the backward pass.
@@ -36,6 +39,7 @@ import jax.numpy as jnp
 
 from repro import compat
 from repro.core.caesar import pick_block_shape
+from repro.kernels import tuning
 
 # ---------------------------------------------------------------------------
 # Platform policy
@@ -83,6 +87,12 @@ def compiler_params(*dimension_semantics: str):
 # (kernel name, shape tuple, dtype name) -> chosen block tuple
 _BLOCK_CACHE: Dict[Tuple[str, Tuple[int, ...], str], Tuple[int, ...]] = {}
 
+# Lazily-loaded snapshot of the on-disk tuned table (None = not loaded yet).
+# Consulted by the pick_block_* helpers between the in-process cache and
+# the heuristic: in-process beats disk beats heuristic.
+_DISK_TABLE: Optional[Dict[Tuple[str, Tuple[int, ...], str],
+                           Tuple[int, ...]]] = None
+
 
 def _cache_key(kernel: str, shape: Sequence[int], dtype: Any
                ) -> Tuple[str, Tuple[int, ...], str]:
@@ -103,6 +113,55 @@ def set_block(kernel: str, shape: Sequence[int], dtype: Any,
     _BLOCK_CACHE[_cache_key(kernel, shape, dtype)] = tuple(block)
 
 
+def block_cache_snapshot() -> Dict[Tuple[str, Tuple[int, ...], str],
+                                   Tuple[int, ...]]:
+    """Copy of the in-process cache (what a tuner would persist)."""
+    return dict(_BLOCK_CACHE)
+
+
+def load_tuned_table(path: Optional[str] = None) -> int:
+    """(Re)load the persistent tuned table; returns the entry count.
+
+    Called eagerly by serving so boots are warm; the pick_block_* helpers
+    also trigger a lazy load on first miss, so calling this is an
+    optimisation, never a requirement.  A missing/stale/corrupt table
+    loads as empty (see :mod:`repro.kernels.tuning`).
+    """
+    global _DISK_TABLE
+    _DISK_TABLE = tuning.load(path)
+    return len(_DISK_TABLE)
+
+
+def reset_disk_table() -> None:
+    """Forget the loaded tuned table (next lookup re-reads; test seam)."""
+    global _DISK_TABLE
+    _DISK_TABLE = None
+
+
+def _disk_block(kernel: str, shape: Sequence[int], dtype: Any
+                ) -> Optional[Tuple[int, ...]]:
+    global _DISK_TABLE
+    if _DISK_TABLE is None:
+        _DISK_TABLE = tuning.load()
+    return _DISK_TABLE.get(_cache_key(kernel, shape, dtype))
+
+
+def _lookup(kernel: str, shape: Sequence[int], dtype: Any
+            ) -> Optional[Tuple[int, ...]]:
+    """Levels 1+2 of the lookup: in-process cache, then disk table.
+
+    A disk hit is promoted into the in-process cache, so later
+    ``set_block``/``autotune`` results still take precedence over it.
+    """
+    hit = cached_block(kernel, shape, dtype)
+    if hit is not None:
+        return hit
+    hit = _disk_block(kernel, shape, dtype)
+    if hit is not None:
+        set_block(kernel, shape, dtype, hit)
+    return hit
+
+
 def largest_divisor(n: int, cap: int) -> int:
     """Largest d with 1 <= d <= cap and n % d == 0."""
     d = max(1, min(int(cap), int(n)))
@@ -111,16 +170,31 @@ def largest_divisor(n: int, cap: int) -> int:
     return d
 
 
+def divisor_candidates(n: int, cap: int, limit: int = 4) -> Tuple[int, ...]:
+    """Up to ``limit`` distinct divisors of ``n`` that are <= ``cap``,
+    largest first.  The building block for ``KernelSpec.candidates``
+    hooks of kernels whose tiles must divide the array."""
+    out = []
+    cap = min(int(cap), int(n))
+    while len(out) < limit:
+        d = largest_divisor(n, cap)
+        out.append(d)
+        if d == 1:
+            break
+        cap = d - 1
+    return tuple(out)
+
+
 def pick_block_2d(kernel: str, shape: Tuple[int, int], dtype: Any = jnp.int32,
                   max_rows: int = 256, max_cols: int = 512) -> Tuple[int, int]:
     """Divisor-aware (rows, cols) tile for an elementwise/row-wise kernel.
 
     Pallas BlockSpecs here require tiles that divide the array exactly, so
-    both sides shrink to the largest divisor under the cap.  The answer is
-    cached per (kernel, shape, dtype); :func:`autotune` results take
-    precedence.
+    both sides shrink to the largest divisor under the cap.  Three-level
+    lookup: the in-process cache (where :func:`autotune` winners land),
+    then the persistent tuned table, then this heuristic.
     """
-    hit = cached_block(kernel, shape, dtype)
+    hit = _lookup(kernel, shape, dtype)
     if hit is not None:
         return hit  # type: ignore[return-value]
     r, c = shape
@@ -132,7 +206,7 @@ def pick_block_2d(kernel: str, shape: Tuple[int, int], dtype: Any = jnp.int32,
 def pick_block_rows(kernel: str, shape: Tuple[int, int],
                     dtype: Any = jnp.int32, max_rows: int = 128) -> int:
     """Row-block for kernels that keep the feature axis whole (softmax)."""
-    hit = cached_block(kernel, shape, dtype)
+    hit = _lookup(kernel, shape, dtype)
     if hit is not None:
         return hit[0]
     br = largest_divisor(shape[0], max_rows)
@@ -145,7 +219,7 @@ def pick_block_matmul(kernel: str, m: int, n: int, k: int,
                       ) -> Tuple[int, int, int]:
     """(bm, bn, bk) for an output-stationary matmul via the CAESAR
     VMEM-budget model (callers pad, so the block need not divide)."""
-    hit = cached_block(kernel, (m, n, k), dtype)
+    hit = _lookup(kernel, (m, n, k), dtype)
     if hit is not None:
         return hit  # type: ignore[return-value]
     block = pick_block_shape(m, n, k,
@@ -162,8 +236,11 @@ def autotune(kernel: str, shape: Sequence[int], dtype: Any,
     """Measure ``run(block)`` per candidate; cache and return the winner.
 
     Each candidate gets one untimed call (compile/warmup) and ``repeats``
-    timed calls.  Candidates that raise (e.g. VMEM overflow on device) are
-    skipped.  The winner lands in the block cache under
+    timed calls, each blocked on individually — under jax's async dispatch,
+    blocking only on the last result would let earlier calls overlap the
+    timer and skew per-candidate numbers.  Candidates that raise (e.g.
+    VMEM overflow on device) are skipped; ``KeyboardInterrupt`` is not
+    swallowed.  The winner lands in the block cache under
     (kernel, shape, dtype), so the ``pick_block_*`` helpers serve it to
     every later trace of the same problem.
     """
@@ -174,11 +251,11 @@ def autotune(kernel: str, shape: Sequence[int], dtype: Any,
         try:
             jax.block_until_ready(run(blk))
             t0 = time.perf_counter()
-            out = None
             for _ in range(repeats):
-                out = run(blk)
-            jax.block_until_ready(out)
+                jax.block_until_ready(run(blk))
             dt = (time.perf_counter() - t0) / max(1, repeats)
+        except KeyboardInterrupt:
+            raise
         except Exception:
             continue
         if dt < best_t:
@@ -203,12 +280,17 @@ class KernelSpec:
             fixed-point families, float-allclose for flash/wkv.
     grad:   float function whose exact VJP is the backward pass (STE);
             None for forward-only families.
+    candidates: ``candidates(shape, dtype) -> iterable of block tuples``
+            — the family's legal tile candidates for the cache-key shape
+            its wrapper uses, enumerated for :func:`autotune` /
+            ``benchmarks.tune``.  None = family is not tunable.
     tags:   free-form labels ("fixed-point", "attention", ...).
     """
     name: str
     kernel: Callable[..., Any]
     ref: Callable[..., Any]
     grad: Optional[Callable[..., Any]] = None
+    candidates: Optional[Callable[..., Tuple[Tuple[int, ...], ...]]] = None
     tags: Tuple[str, ...] = ()
 
 

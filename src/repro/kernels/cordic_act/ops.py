@@ -55,6 +55,18 @@ def _exact_act(x: jax.Array, *, af: str) -> jax.Array:
     return _EXACT[af](x)
 
 
+def _candidates(shape, dtype):
+    """Legal (rows, cols) tiles for the flattened 2-d input: the Pallas
+    BlockSpec requires exact division, so candidates are divisor pairs
+    under the elementwise caps.  Cache keys are per-AF
+    (``cordic_act.tanh`` etc.) but legality depends only on the shape."""
+    r, c = shape
+    return tuple((br, bc)
+                 for br in common.divisor_candidates(r, 256, 3)
+                 for bc in common.divisor_candidates(c, 512, 3))
+
+
 common.register(common.KernelSpec(
     name="cordic_act", kernel=cordic_act_raw, ref=cordic_act_raw_ref,
-    grad=_exact_act, tags=("fixed-point", "elementwise")))
+    grad=_exact_act, candidates=_candidates,
+    tags=("fixed-point", "elementwise")))

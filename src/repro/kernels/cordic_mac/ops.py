@@ -67,6 +67,28 @@ def cordic_matmul(x: jax.Array, w: jax.Array, *, fmt: FxpFormat = fxp.FXP16,
     return f(x, w)
 
 
+def _candidates(shape, dtype):
+    """(bm, bn, bk) candidates for the (m, n, k) problem.  The wrapper
+    pads, so blocks need not divide — candidates are the CAESAR
+    VMEM-model pick plus square-ish power-of-two tiles clamped to the
+    padded problem (>= 8 keeps the sublane tile legal on TPU)."""
+    m, n, k = shape
+
+    def clamp(dim: int, b: int) -> int:
+        ceil_pow2 = 1 << (max(1, dim) - 1).bit_length()
+        return max(8, min(b, ceil_pow2))
+
+    caesar = common.pick_block_shape(
+        m, n, k, bytes_per_el=jnp.dtype(dtype).itemsize, max_block=256)
+    cands = [tuple(caesar)]
+    for b in (64, 128, 256):
+        cand = (clamp(m, b), clamp(n, b), clamp(k, b))
+        if cand not in cands:
+            cands.append(cand)
+    return tuple(cands)
+
+
 common.register(common.KernelSpec(
     name="cordic_mac", kernel=cordic_matmul_raw, ref=cordic_matmul_raw_ref,
-    grad=_exact_matmul, tags=("fixed-point", "matmul")))
+    grad=_exact_matmul, candidates=_candidates,
+    tags=("fixed-point", "matmul")))

@@ -56,7 +56,14 @@ def cordic_softmax(x: jax.Array, *, fmt: FxpFormat = fxp.FXP16,
     return f(x)
 
 
+def _candidates(shape, dtype):
+    """Legal (rows, cols) tiles: the feature axis stays whole (the kernel
+    reduces over it), so only the row-block varies, over divisors."""
+    r, c = shape
+    return tuple((br, c) for br in common.divisor_candidates(r, 128, 4))
+
+
 common.register(common.KernelSpec(
     name="cordic_softmax", kernel=cordic_softmax_raw,
     ref=cordic_softmax_raw_ref, grad=_exact_softmax,
-    tags=("fixed-point", "rowwise")))
+    candidates=_candidates, tags=("fixed-point", "rowwise")))

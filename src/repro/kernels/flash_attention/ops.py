@@ -38,11 +38,23 @@ def _exact_attention(q, k, v, *, causal: bool):
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                    causal: bool = True, block_q: int = 128,
-                    block_k: int = 128,
+                    causal: bool = True, block_q: Optional[int] = None,
+                    block_k: Optional[int] = None,
                     interpret: Optional[bool] = None) -> jax.Array:
-    """q: (B, Sq, Hq, d); k/v: (B, Sk, Hkv, d).  Returns (B, Sq, Hq, d)."""
+    """q: (B, Sq, Hq, d); k/v: (B, Sk, Hkv, d).  Returns (B, Sq, Hq, d).
+
+    ``block_q``/``block_k`` default through the substrate cache keyed on
+    (Sq, Sk) — tuned-table entries apply; the heuristic matches the old
+    fixed 128 default (the kernel clamps to a divisor either way).  The
+    pick happens outside the jitted forward so tuned entries retrace.
+    """
     interpret = common.resolve_interpret(interpret)
+    if block_q is None or block_k is None:
+        bq, bk = common.pick_block_2d("flash_attention",
+                                      (q.shape[1], k.shape[1]), q.dtype,
+                                      max_rows=128, max_cols=128)
+        block_q = block_q if block_q is not None else bq
+        block_k = block_k if block_k is not None else bk
     f = common.ste(
         functools.partial(_fwd, causal=causal, block_q=block_q,
                           block_k=block_k, interpret=interpret),
@@ -50,7 +62,17 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return f(q, k, v)
 
 
+def _candidates(shape, dtype):
+    """(block_q, block_k) candidates for the (Sq, Sk) key: divisors keep
+    the kernel's own clamp a no-op, so the measured block is the run
+    block."""
+    sq, sk = shape
+    return tuple((bq, bk)
+                 for bq in common.divisor_candidates(sq, 256, 3)
+                 for bk in common.divisor_candidates(sk, 256, 3))
+
+
 common.register(common.KernelSpec(
     name="flash_attention", kernel=flash_attention_nhd,
     ref=attention_nhd_ref, grad=_exact_attention,
-    tags=("float", "attention")))
+    candidates=_candidates, tags=("float", "attention")))

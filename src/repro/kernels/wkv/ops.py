@@ -35,16 +35,30 @@ def _exact_wkv(r, k, v, w, u):
 
 
 def wkv(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
-        u: jax.Array, *, block_t: int = 64,
+        u: jax.Array, *, block_t: Optional[int] = None,
         interpret: Optional[bool] = None) -> jax.Array:
-    """r/k/v/w: (B, T, H, d); u: (H, d).  Returns (B, T, H, d)."""
+    """r/k/v/w: (B, T, H, d); u: (H, d).  Returns (B, T, H, d).
+
+    ``block_t`` defaults through the substrate cache keyed on (T, d) —
+    tuned-table entries apply; the heuristic matches the old fixed 64
+    default (the kernel clamps to a divisor of T either way)."""
     interpret = common.resolve_interpret(interpret)
+    if block_t is None:
+        block_t = common.pick_block_rows("wkv", (r.shape[1], r.shape[3]),
+                                         r.dtype, max_rows=64)
     f = common.ste(
         functools.partial(_fwd, block_t=block_t, interpret=interpret),
         _exact_wkv)
     return f(r, k, v, w, u)
 
 
+def _candidates(shape, dtype):
+    """(block_t, d) candidates for the (T, d) key: the time axis is the
+    only tunable dimension (sequential sweep); it must divide T."""
+    t, d = shape
+    return tuple((bt, d) for bt in common.divisor_candidates(t, 128, 4))
+
+
 common.register(common.KernelSpec(
     name="wkv", kernel=wkv_recurrence, ref=wkv_recurrence_ref,
-    grad=_exact_wkv, tags=("float", "recurrent")))
+    grad=_exact_wkv, candidates=_candidates, tags=("float", "recurrent")))

@@ -4,6 +4,16 @@ import os
 # for launch/dryrun.py).  Determinism + no x64 surprises.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+# Hermetic block picks: a tuned table from a local `python -m
+# benchmarks.tune` run (XDG default or an exported REPRO_TUNE_CACHE) must
+# not leak into test assertions, so overwrite — don't setdefault — with a
+# never-existing per-session path outside the source tree.  Tests of the
+# disk layer monkeypatch REPRO_TUNE_CACHE themselves.
+import tempfile  # noqa: E402
+
+os.environ["REPRO_TUNE_CACHE"] = os.path.join(
+    tempfile.mkdtemp(prefix="repro-test-tuned-"), "absent.json")
+
 import numpy as np  # noqa: E402
 import pytest  # noqa: E402
 
