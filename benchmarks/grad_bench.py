@@ -1,0 +1,199 @@
+"""Backward-pass benchmark: fused Pallas kernels vs the STE fallback.
+
+    PYTHONPATH=src python -m benchmarks.grad_bench [--smoke] [--out BENCH_grads.json]
+
+For the two float families (``flash_attention``, ``wkv``) this times one
+full ``jax.value_and_grad`` step — forward + backward — twice per shape:
+once through the fused backward kernels (``kernel_bwd.py``, the default)
+and once through the STE fallback (``REPRO_FUSED_BWD=0``: the exact VJP
+of the materialised-scores / float-scan reference).  Shapes derive from
+the ``repro.configs`` registry plus fixed long-context cells (S >= 1024),
+where the O(S^2) vs O(S) residual-memory gap is the point.
+
+Each row also carries an **analytic peak-residual-memory estimate**
+(bytes held between forward and backward):
+
+  * flash STE  — the reference VJP stashes the (B, Hq, Sq, Sk) probability
+    matrix plus its mask: ~2 f32 copies of S^2 per head.
+  * flash fused — q/k/v/o/do plus the per-row lse and delta: O(S d).
+  * wkv STE   — the scan VJP stashes every per-token carry:
+    (B*H, T, dk, dv) f32.
+  * wkv fused — inputs plus (B*H, T/bt, dk, dv) checkpoints: O(T/bt).
+
+Writes ``BENCH_grads.json``; also registered as the ``grads`` suite of
+``benchmarks/run.py`` (smoke shapes).  On CPU the kernels run in Pallas
+interpret mode, so absolute timings are only comparable within a run.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.kernels as K
+from repro.kernels import common, tuning
+from repro.kernels.wkv.ops import bwd_block_cap
+
+
+@dataclasses.dataclass
+class GradProblem:
+    family: str
+    shape: Tuple[int, ...]       # reporting shape (see fields per family)
+    make: Callable[[], Tuple[Any, ...]]   # fresh primals
+    op: Callable[..., jax.Array]          # public wrapper, arrays only
+    est_fused: int                        # residual bytes, fused path
+    est_ste: int                          # residual bytes, STE path
+
+
+def _flash_problems(shapes) -> List[GradProblem]:
+    rng = np.random.default_rng(0)
+    out = []
+    for b, s, hq, hkv, d in shapes:
+        def make(b=b, s=s, hq=hq, hkv=hkv, d=d):
+            q = jnp.array(rng.normal(size=(b, s, hq, d)), jnp.float32)
+            k = jnp.array(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+            v = jnp.array(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+            return q, k, v
+
+        fused = 4 * (b * s * d * (hq + 2 * hkv) + 2 * b * hq * s)
+        ste = 4 * 2 * b * hq * s * s
+        out.append(GradProblem("flash_attention", (b, s, hq, hkv, d),
+                               make, K.flash_attention, fused, ste))
+    return out
+
+
+def _wkv_problems(shapes) -> List[GradProblem]:
+    rng = np.random.default_rng(1)
+    out = []
+    for b, t, h, d in shapes:
+        def make(b=b, t=t, h=h, d=d):
+            r = jnp.array(rng.normal(size=(b, t, h, d)), jnp.float32)
+            k = jnp.array(rng.normal(size=(b, t, h, d)), jnp.float32)
+            v = jnp.array(rng.normal(size=(b, t, h, d)), jnp.float32)
+            w = jnp.array(rng.uniform(0.1, 0.9, (b, t, h, d)), jnp.float32)
+            u = jnp.array(rng.normal(size=(h, d)), jnp.float32)
+            return r, k, v, w, u
+
+        # Checkpoint spacing = the wrapper's heuristic on this platform,
+        # so the estimate matches the blocks the timed run used.
+        bt = common.largest_divisor(t, bwd_block_cap(d))
+        fused = 4 * (4 * b * t * h * d + b * h * (t // bt) * d * d)
+        ste = 4 * (4 * b * t * h * d + b * h * t * d * d)
+        out.append(GradProblem("wkv", (b, t, h, d), make, K.wkv,
+                               fused, ste))
+    return out
+
+
+def _shapes(smoke: bool):
+    if smoke:
+        return ([(1, 64, 2, 1, 8)],        # flash: (B, S, Hq, Hkv, d)
+                [(1, 32, 2, 8)])           # wkv:   (B, T, H, d)
+    flash = [(1, 1024, 4, 2, 64), (1, 2048, 4, 2, 64), (2, 1024, 8, 8, 32)]
+    wkv = [(1, 1024, 4, 32), (1, 2048, 4, 32), (2, 1024, 8, 16)]
+    from repro.configs import ARCHS
+    for cfg in (a.reduced() for a in ARCHS.values()):
+        tokens = 4 * cfg.attn_chunk
+        flash.append((1, tokens, cfg.n_heads, max(1, cfg.n_kv_heads),
+                      cfg.head_dim_))
+        if cfg.ssm_state:
+            wkv.append((1, tokens, cfg.n_heads, cfg.head_dim_))
+    return sorted(set(flash)), sorted(set(wkv))
+
+
+def _time_grad(p: GradProblem, fused: bool, repeats: int) -> float:
+    """us per value_and_grad call, built and traced under the given mode."""
+    prev = os.environ.get("REPRO_FUSED_BWD")
+    os.environ["REPRO_FUSED_BWD"] = "1" if fused else "0"
+    try:
+        args = p.make()
+
+        # A fresh closure per mode: the wrapper reads REPRO_FUSED_BWD at
+        # trace time, so the jitted program bakes the chosen path in.
+        @jax.jit
+        def step(*a):
+            return jax.value_and_grad(
+                lambda *aa: p.op(*aa).sum(), argnums=tuple(range(len(a))))(*a)
+
+        jax.block_until_ready(step(*args))
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            jax.block_until_ready(step(*args))
+        return (time.perf_counter() - t0) / max(1, repeats) * 1e6
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_FUSED_BWD", None)
+        else:
+            os.environ["REPRO_FUSED_BWD"] = prev
+
+
+def sweep(smoke: bool = False, repeats: int = 3,
+          out_path: Optional[str] = None) -> Dict[str, Any]:
+    flash_shapes, wkv_shapes = _shapes(smoke)
+    problems = _flash_problems(flash_shapes) + _wkv_problems(wkv_shapes)
+    rows: List[Dict[str, Any]] = []
+    for p in problems:
+        us_fused = _time_grad(p, fused=True, repeats=repeats)
+        us_ste = _time_grad(p, fused=False, repeats=repeats)
+        rows.append({
+            "family": p.family, "shape": list(p.shape),
+            "us_fused": round(us_fused, 1), "us_ste": round(us_ste, 1),
+            "speedup": round(us_ste / max(us_fused, 1e-9), 3),
+            "est_peak_bytes_fused": p.est_fused,
+            "est_peak_bytes_ste": p.est_ste,
+            "mem_ratio": round(p.est_ste / max(p.est_fused, 1), 2),
+        })
+    report = {
+        "meta": {**tuning.version_stamp(), "smoke": smoke,
+                 "repeats": repeats},
+        "rows": rows,
+    }
+    if out_path:
+        with open(out_path, "w", encoding="utf-8") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+    return report
+
+
+def run(csv_rows):
+    """`benchmarks.run` suite entry: smoke shapes, CSV rows per cell."""
+    report = sweep(smoke=True, repeats=1)
+    for r in report["rows"]:
+        shape = "x".join(str(s) for s in r["shape"])
+        csv_rows.append((
+            f"grads_{r['family']}_{shape}", r["us_fused"],
+            f"ste_us={r['us_ste']};speedup={r['speedup']};"
+            f"mem_ratio={r['mem_ratio']}"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Fused vs STE backward benchmark for the float "
+                    "kernel families.")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, repeats=1 (CI lane)")
+    ap.add_argument("--repeats", type=int, default=None,
+                    help="timed calls per mode (default 3; 1 in smoke)")
+    ap.add_argument("--out", default="BENCH_grads.json",
+                    help="report path ('' to skip)")
+    args = ap.parse_args(argv)
+    repeats = args.repeats if args.repeats is not None else (
+        1 if args.smoke else 3)
+    report = sweep(smoke=args.smoke, repeats=repeats,
+                   out_path=args.out or None)
+    print("family,shape,us_fused,us_ste,speedup,mem_ratio")
+    for r in report["rows"]:
+        print(f"{r['family']},{'x'.join(str(s) for s in r['shape'])},"
+              f"{r['us_fused']},{r['us_ste']},{r['speedup']},"
+              f"{r['mem_ratio']}")
+    return 0 if report["rows"] else 1
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

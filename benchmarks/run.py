@@ -12,6 +12,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * tune_*      - kernel tile-candidate sweep (smoke), heuristic vs tuned;
                   writes the persistent tuned table (REPRO_TUNE_CACHE).
                   Full sweep: ``python -m benchmarks.tune``.
+  * grads_*     - fused Pallas backward vs STE fallback (smoke) for the
+                  float families.  Full sweep with long-context shapes:
+                  ``python -m benchmarks.grad_bench``.
 """
 from __future__ import annotations
 
@@ -23,11 +26,12 @@ import traceback
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="pareto|mac|caesar|accuracy|roofline|tune")
+                    help="pareto|mac|caesar|accuracy|roofline|tune|grads")
     args = ap.parse_args(argv)
 
-    from benchmarks import (accuracy_bench, caesar_bench, mac_bench,
-                            pareto_bench, roofline_bench, tune_bench)
+    from benchmarks import (accuracy_bench, caesar_bench, grad_bench,
+                            mac_bench, pareto_bench, roofline_bench,
+                            tune_bench)
     suites = {
         "pareto": pareto_bench.run,
         "mac": mac_bench.run,
@@ -35,6 +39,7 @@ def main(argv=None):
         "accuracy": accuracy_bench.run,
         "roofline": roofline_bench.run,
         "tune": tune_bench.run,
+        "grads": grad_bench.run,
     }
     if args.only:
         suites = {args.only: suites[args.only]}

@@ -73,6 +73,8 @@ def _shape_sets(smoke: bool) -> Dict[str, List[Tuple[int, ...]]]:
             "cordic_mac": [(64, 64, 64)],
             "flash_attention": [(32, 32, 2, 1, 8)],   # (sq, sk, hq, hkv, d)
             "wkv": [(32, 2, 8)],                      # (t, h, d)
+            "flash_attention.bwd": [(32, 32, 2, 1, 8)],
+            "wkv.bwd": [(32, 2, 8)],
         }
     from repro.configs import ARCHS
     acts, softs, macs, flashes, wkvs = set(), set(), set(), set(), set()
@@ -93,6 +95,9 @@ def _shape_sets(smoke: bool) -> Dict[str, List[Tuple[int, ...]]]:
         "cordic_mac": sorted(macs),
         "flash_attention": sorted(flashes),
         "wkv": sorted(wkvs),
+        # Backward tiles tune over the same shapes, under their own keys.
+        "flash_attention.bwd": sorted(flashes),
+        "wkv.bwd": sorted(wkvs),
     }
 
 
@@ -136,6 +141,32 @@ def _problems(smoke: bool) -> List[Problem]:
         out.append(Problem("wkv", "wkv", (t, d), jnp.float32,
                            lambda r_=r_, k_=k_, v_=v_, w_=w_, u_=u_:
                            K.wkv(r_, k_, v_, w_, u_)))
+
+    # Backward tiles: the call is a full grad step, so the candidate under
+    # test (installed by autotune under the .bwd key) is the block the
+    # fused backward kernels actually run with.
+    for sq, sk, hq, hkv, d in shapes["flash_attention.bwd"]:
+        q = jnp.array(rng.normal(size=(1, sq, hq, d)), jnp.float32)
+        kk = jnp.array(rng.normal(size=(1, sk, hkv, d)), jnp.float32)
+        v = jnp.array(rng.normal(size=(1, sk, hkv, d)), jnp.float32)
+        out.append(Problem(
+            "flash_attention.bwd", "flash_attention.bwd", (sq, sk),
+            jnp.float32,
+            lambda q=q, kk=kk, v=v: jax.grad(
+                lambda a, b, c: K.flash_attention(a, b, c).sum(),
+                argnums=(0, 1, 2))(q, kk, v)))
+
+    for t, h, d in shapes["wkv.bwd"]:
+        r_ = jnp.array(rng.normal(size=(1, t, h, d)), jnp.float32)
+        k_ = jnp.array(rng.normal(size=(1, t, h, d)), jnp.float32)
+        v_ = jnp.array(rng.normal(size=(1, t, h, d)), jnp.float32)
+        w_ = jnp.array(rng.uniform(0.1, 0.9, (1, t, h, d)), jnp.float32)
+        u_ = jnp.array(rng.normal(size=(h, d)), jnp.float32)
+        out.append(Problem(
+            "wkv.bwd", "wkv.bwd", (t, d), jnp.float32,
+            lambda r_=r_, k_=k_, v_=v_, w_=w_, u_=u_: jax.grad(
+                lambda *a: K.wkv(*a).sum(),
+                argnums=(0, 1, 2, 3, 4))(r_, k_, v_, w_, u_)))
     return out
 
 

@@ -18,11 +18,14 @@ Every kernel family (``cordic_act``, ``cordic_mac``, ``cordic_softmax``,
     persistent tuned table from :mod:`repro.kernels.tuning`, then the
     shape heuristic.
   * **registry** — :class:`KernelSpec` maps a family name to its raw Pallas
-    entry point, its bit/numeric oracle from ``ref.py``, and the float
-    function whose exact VJP is the backward pass.
+    entry point, its bit/numeric oracle from ``ref.py``, the float
+    function whose exact VJP is the STE backward pass, and (for families
+    that have one) the fused Pallas backward entry point.
   * **gradients** — :func:`ste` packages the straight-through custom_vjp
     pattern (quantized forward, exact float backward) that every family
-    used to hand-roll.
+    used to hand-roll; :func:`fused_vjp` generalises it to a fused Pallas
+    backward kernel when the family registers one
+    (``REPRO_FUSED_BWD=0`` forces the STE fallback).
 
 Adding a new family?  Read ``docs/KERNELS.md``.
 """
@@ -280,16 +283,23 @@ class KernelSpec:
             fixed-point families, float-allclose for flash/wkv.
     grad:   float function whose exact VJP is the backward pass (STE);
             None for forward-only families.
+    grad_kernel: the raw fused Pallas backward entry point (tiled, takes
+            ``interpret=``), consuming the residuals the forward emits
+            under ``return_residuals=True``.  None = the family trains
+            through the STE fallback only.
     candidates: ``candidates(shape, dtype) -> iterable of block tuples``
             — the family's legal tile candidates for the cache-key shape
             its wrapper uses, enumerated for :func:`autotune` /
             ``benchmarks.tune``.  None = family is not tunable.
+            Backward tiles get their own registry entry (a ``<family>.bwd``
+            spec) so the sweep tunes them independently.
     tags:   free-form labels ("fixed-point", "attention", ...).
     """
     name: str
     kernel: Callable[..., Any]
     ref: Callable[..., Any]
     grad: Optional[Callable[..., Any]] = None
+    grad_kernel: Optional[Callable[..., Any]] = None
     candidates: Optional[Callable[..., Tuple[Tuple[int, ...], ...]]] = None
     tags: Tuple[str, ...] = ()
 
@@ -341,6 +351,56 @@ def ste(fwd: Callable[..., jax.Array],
     def f_bwd(args, g):
         _, vjp = jax.vjp(grad, *args)
         return vjp(g)
+
+    f.defvjp(f_fwd, f_bwd)
+    return f
+
+
+# ---------------------------------------------------------------------------
+# Fused backward kernels
+# ---------------------------------------------------------------------------
+
+
+def fused_backward_enabled() -> bool:
+    """Global switch for the fused Pallas backward passes.
+
+    On by default; ``REPRO_FUSED_BWD=0`` forces every family back onto the
+    STE fallback (the exact VJP of the float reference) — the escape hatch
+    while debugging a backward kernel on device.
+    """
+    env = os.environ.get("REPRO_FUSED_BWD")
+    if env is None:
+        return True
+    return env.lower() not in ("0", "false", "no")
+
+
+def fused_vjp(fwd: Callable[..., jax.Array],
+              grad: Callable[..., jax.Array],
+              fwd_res: Optional[Callable[..., Any]] = None,
+              bwd: Optional[Callable[..., Any]] = None
+              ) -> Callable[..., jax.Array]:
+    """custom_vjp wrapper generalising :func:`ste` to fused backwards.
+
+    ``fwd`` runs the kernel; when the family registers a fused backward
+    pair — ``fwd_res(*args) -> (out, residuals)`` (the kernel forward also
+    emitting its O(S) residuals) and ``bwd(residuals, g) -> cotangents`` —
+    differentiation goes through it.  Without the pair, or with
+    ``REPRO_FUSED_BWD=0``, this *is* :func:`ste`: quantized/kernel forward,
+    exact float backward via ``grad``.  As with ``ste``, all static
+    configuration must already be bound in; the callables take arrays only.
+    """
+    if fwd_res is None or bwd is None or not fused_backward_enabled():
+        return ste(fwd, grad)
+
+    @jax.custom_vjp
+    def f(*args):
+        return fwd(*args)
+
+    def f_fwd(*args):
+        return fwd_res(*args)
+
+    def f_bwd(res, g):
+        return bwd(res, g)
 
     f.defvjp(f_fwd, f_bwd)
     return f

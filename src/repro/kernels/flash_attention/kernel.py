@@ -26,8 +26,12 @@ from repro.kernels import common
 NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-                  bq: int, bk: int, scale: float, causal: bool, nk: int):
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *rest, bq: int, bk: int,
+                  scale: float, causal: bool, nk: int, with_lse: bool):
+    if with_lse:
+        lse_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        lse_ref, (m_scr, l_scr, acc_scr) = None, rest
     iq = pl.program_id(1)
     ik = pl.program_id(2)
 
@@ -69,15 +73,23 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
     def _finish():
         denom = jnp.maximum(l_scr[...], 1e-30)
         o_ref[0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+        if with_lse:
+            # Per-row log-sum-exp of the scaled scores: the O(S) residual
+            # the fused backward recomputes score tiles against.
+            lse_ref[0] = m_scr[...] + jnp.log(denom)
 
 
 def flash_attention_nhd(q: jax.Array, k: jax.Array, v: jax.Array, *,
                         causal: bool = True, block_q: int = 128,
                         block_k: int = 128, group: int = 1,
-                        interpret: bool = True) -> jax.Array:
+                        interpret: bool = True,
+                        return_residuals: bool = False):
     """q: (Hq, Sq, d); k/v: (Hkv, Sk, d) with Hq = group * Hkv.
 
     Returns (Hq, Sq, d) in q's dtype.  Sq/Sk must tile by the blocks.
+    With ``return_residuals`` also returns the per-row log-sum-exp of the
+    scaled scores, shape (Hq, Sq) float32 — the O(S) residual the fused
+    backward (see ``kernel_bwd.py``) recomputes score tiles against.
     """
     hq, sq, d = q.shape
     hkv, sk, _ = k.shape
@@ -87,7 +99,15 @@ def flash_attention_nhd(q: jax.Array, k: jax.Array, v: jax.Array, *,
     nk = sk // bk
     grid = (hq, sq // bq, nk)
     kernel = functools.partial(_flash_kernel, bq=bq, bk=bk,
-                               scale=1.0 / (d ** 0.5), causal=causal, nk=nk)
+                               scale=1.0 / (d ** 0.5), causal=causal, nk=nk,
+                               with_lse=return_residuals)
+    out_specs = pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0))
+    out_shape = jax.ShapeDtypeStruct((hq, sq, d), q.dtype)
+    if return_residuals:
+        out_specs = [out_specs,
+                     pl.BlockSpec((1, bq), lambda h, i, j: (h, i))]
+        out_shape = [out_shape,
+                     jax.ShapeDtypeStruct((hq, sq), jnp.float32)]
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -96,8 +116,8 @@ def flash_attention_nhd(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pl.BlockSpec((1, bk, d), lambda h, i, j, g=group: (h // g, j, 0)),
             pl.BlockSpec((1, bk, d), lambda h, i, j, g=group: (h // g, j, 0)),
         ],
-        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((hq, sq, d), q.dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[
             pltpu.VMEM((bq,), jnp.float32),
             pltpu.VMEM((bq,), jnp.float32),

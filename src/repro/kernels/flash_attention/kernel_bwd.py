@@ -1,0 +1,197 @@
+"""Pallas TPU kernels: fused flash-attention backward (recompute scheme).
+
+The forward stashes one float per row — the log-sum-exp of the scaled
+scores (``return_residuals=True`` in ``kernel.py``) — and the backward
+rebuilds each probability tile on the fly as
+
+    p = exp(q k^T * scale - lse)
+
+instead of differentiating through a materialised (S x S) score matrix.
+O(S) residual memory where the STE fallback pays O(S^2): the same
+trade-cheap-recompute-for-expensive-storage move the paper's engines make
+in hardware.
+
+Two passes, both tiled and both skipping causally-dead tiles, and both
+keeping the **head axis whole inside the block**: the grid runs over
+sequence tiles only, and every contraction is one hkv-batched
+``dot_general`` across all heads — fewer grid steps, fuller MXU shapes,
+and the GQA group-sum falls out of the contraction instead of a
+wrapper-side reduction:
+
+  * **dQ** — grid (q_blocks, k_blocks), K innermost; the (Hq, bq, d) dQ
+    tile accumulates in VMEM scratch across the K sweep
+    (output-stationary).
+  * **dK/dV** — grid (k_blocks, q_blocks), Q innermost; the (Hkv, bk, d)
+    dK and dV tiles accumulate across the Q sweep, summing each group of
+    q heads into its kv head inside the contraction.
+
+Both consume ``delta = rowsum(dO * O)`` (the softmax-VJP correction term),
+computed once in jnp by the wrapper — O(S d) work, no kernel needed.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import common
+from repro.kernels.flash_attention.kernel import NEG_INF
+
+
+def _tile_grads(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                q_start, k_start, *, bq, bk, scale, causal, group):
+    """Recompute p and ds for one (all-heads, bq, bk) tile pair.
+
+    Returns (p, ds, q_r, k, do_r) with p/ds shaped (hkv, g, bq, bk) and
+    q_r/do_r (hkv, g, bq, d) — everything the two passes contract from.
+    """
+    hq = q_ref.shape[0]
+    hkv = hq // group
+    d = q_ref.shape[-1]
+    q_r = q_ref[...].astype(jnp.float32).reshape(hkv, group, bq, d)
+    do_r = do_ref[...].astype(jnp.float32).reshape(hkv, group, bq, d)
+    k = k_ref[...].astype(jnp.float32)                 # (hkv, bk, d)
+    v = v_ref[...].astype(jnp.float32)
+    lse = lse_ref[...].reshape(hkv, group, bq)
+    delta = delta_ref[...].reshape(hkv, group, bq)
+    s = jax.lax.dot_general(                           # (hkv, g, bq, bk)
+        q_r, k, (((3,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32) * scale
+    if causal:
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where((qpos >= kpos)[None, None], s, NEG_INF)
+    p = jnp.exp(s - lse[..., None])
+    dp = jax.lax.dot_general(                          # dO V^T
+        do_r, v, (((3,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+    ds = p * (dp - delta[..., None]) * scale
+    return p, ds, q_r, k, do_r
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+               acc_scr, *, bq: int, bk: int, scale: float, causal: bool,
+               group: int, nk: int):
+    iq = pl.program_id(0)
+    ik = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * bq
+    k_start = ik * bk
+    live = jnp.logical_or(not causal, k_start <= q_start + bq - 1)
+
+    @pl.when(live)
+    def _step():
+        _, ds, _, k, _ = _tile_grads(
+            q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+            q_start, k_start, bq=bq, bk=bk, scale=scale, causal=causal,
+            group=group)
+        dq = jax.lax.dot_general(                       # dS K: (hkv,g,bq,d)
+            ds, k, (((3,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+        acc_scr[...] += dq.reshape(acc_scr.shape)
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        dq_ref[...] = acc_scr[...].astype(dq_ref.dtype)
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                dk_ref, dv_ref, dk_scr, dv_scr, *, bq: int, bk: int,
+                scale: float, causal: bool, group: int, nq: int):
+    ij = pl.program_id(0)   # k block
+    iq = pl.program_id(1)   # q block (innermost, sequential)
+
+    @pl.when(iq == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    q_start = iq * bq
+    k_start = ij * bk
+    live = jnp.logical_or(not causal, q_start + bq - 1 >= k_start)
+
+    @pl.when(live)
+    def _step():
+        p, ds, q_r, _, do_r = _tile_grads(
+            q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+            q_start, k_start, bq=bq, bk=bk, scale=scale, causal=causal,
+            group=group)
+        # Contract over (group, bq): the GQA group-sum happens here.
+        dv_scr[...] += jax.lax.dot_general(             # P^T dO: (hkv,bk,d)
+            p, do_r, (((1, 2), (1, 2)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+        dk_scr[...] += jax.lax.dot_general(             # dS^T Q: (hkv,bk,d)
+            ds, q_r, (((1, 2), (1, 2)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(iq == nq - 1)
+    def _finish():
+        dk_ref[...] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[...] = dv_scr[...].astype(dv_ref.dtype)
+
+
+def flash_attention_bwd_nhd(q: jax.Array, k: jax.Array, v: jax.Array,
+                            do: jax.Array, lse: jax.Array, delta: jax.Array,
+                            *, causal: bool = True, block_q: int = 128,
+                            block_k: int = 128, group: int = 1,
+                            interpret: bool = True
+                            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused backward on the (H, S, d) layout.
+
+    q/do: (Hq, Sq, d); k/v: (Hkv, Sk, d); lse/delta: (Hq, Sq) float32.
+    Returns float32 (dq (Hq, Sq, d), dk (Hkv, Sk, d), dv (Hkv, Sk, d)) —
+    dk/dv are already group-summed to kv heads.
+    """
+    hq, sq, d = q.shape
+    hkv, sk, _ = k.shape
+    assert hq == group * hkv, (hq, hkv, group)
+    bq = common.largest_divisor(sq, block_q)
+    bk = common.largest_divisor(sk, block_k)
+    nq = sq // bq
+    nk = sk // bk
+    scale = 1.0 / (d ** 0.5)
+
+    q_spec = pl.BlockSpec((hq, bq, d), lambda i, j: (0, i, 0))
+    kv_spec = pl.BlockSpec((hkv, bk, d), lambda i, j: (0, j, 0))
+    row_spec = pl.BlockSpec((hq, bq), lambda i, j: (0, i))
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, bq=bq, bk=bk, scale=scale,
+                          causal=causal, group=group, nk=nk),
+        grid=(nq, nk),
+        in_specs=[q_spec, kv_spec, kv_spec, q_spec, row_spec, row_spec],
+        out_specs=pl.BlockSpec((hq, bq, d), lambda i, j: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((hq, sq, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((hq, bq, d), jnp.float32)],
+        compiler_params=common.compiler_params("parallel", "arbitrary"),
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+    # Same maps with the (k block, q block) grid order of the dK/dV pass.
+    q_spec2 = pl.BlockSpec((hq, bq, d), lambda j, i: (0, i, 0))
+    kv_spec2 = pl.BlockSpec((hkv, bk, d), lambda j, i: (0, j, 0))
+    row_spec2 = pl.BlockSpec((hq, bq), lambda j, i: (0, i))
+    dkv_out = pl.BlockSpec((hkv, bk, d), lambda j, i: (0, j, 0))
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, bq=bq, bk=bk, scale=scale,
+                          causal=causal, group=group, nq=nq),
+        grid=(nk, nq),
+        in_specs=[q_spec2, kv_spec2, kv_spec2, q_spec2, row_spec2, row_spec2],
+        out_specs=[dkv_out, dkv_out],
+        out_shape=[jax.ShapeDtypeStruct((hkv, sk, d), jnp.float32),
+                   jax.ShapeDtypeStruct((hkv, sk, d), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((hkv, bk, d), jnp.float32),
+                        pltpu.VMEM((hkv, bk, d), jnp.float32)],
+        compiler_params=common.compiler_params("parallel", "arbitrary"),
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+    return dq, dk, dv

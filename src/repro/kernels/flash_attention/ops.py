@@ -9,7 +9,13 @@ import jax.numpy as jnp
 
 from repro.kernels import common
 from repro.kernels.flash_attention.kernel import flash_attention_nhd
-from repro.kernels.flash_attention.ref import attention_nhd_ref
+from repro.kernels.flash_attention.kernel_bwd import flash_attention_bwd_nhd
+from repro.kernels.flash_attention.ref import (attention_bwd_ref,
+                                               attention_nhd_ref)
+
+
+def _to_hsd(x):
+    return x.transpose(0, 2, 1, 3)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
@@ -22,8 +28,44 @@ def _fwd(q, k, v, causal: bool, block_q: int, block_k: int, interpret: bool):
         lambda qq, kk, vv: flash_attention_nhd(
             qq, kk, vv, causal=causal, block_q=block_q, block_k=block_k,
             group=group, interpret=interpret)
-    )(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
-      v.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
+    )(_to_hsd(q), _to_hsd(k), _to_hsd(v)).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def _fwd_res(q, k, v, causal: bool, block_q: int, block_k: int,
+             interpret: bool):
+    """Forward also emitting the per-row LSE residual, (B, Hq, Sq) f32."""
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    group = hq // hkv
+    out, lse = jax.vmap(
+        lambda qq, kk, vv: flash_attention_nhd(
+            qq, kk, vv, causal=causal, block_q=block_q, block_k=block_k,
+            group=group, interpret=interpret, return_residuals=True)
+    )(_to_hsd(q), _to_hsd(k), _to_hsd(v))
+    return out.transpose(0, 2, 1, 3), lse
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def _bwd_impl(q, k, v, o, lse, do, causal: bool, block_q: int, block_k: int,
+              interpret: bool):
+    """Fused backward on the public layout; cotangents in primal dtypes."""
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    group = hq // hkv
+    # softmax-VJP correction term, one float per row: O(S d) jnp work.
+    delta = jnp.einsum("bshd,bshd->bhs", do.astype(jnp.float32),
+                       o.astype(jnp.float32))
+    dq, dk, dv = jax.vmap(
+        lambda qq, kk, vv, dd, ll, de: flash_attention_bwd_nhd(
+            qq, kk, vv, dd, ll, de, causal=causal, block_q=block_q,
+            block_k=block_k, group=group, interpret=interpret)
+    )(_to_hsd(q), _to_hsd(k), _to_hsd(v), _to_hsd(do), lse, delta)
+    return (dq.transpose(0, 2, 1, 3).astype(q.dtype),
+            dk.transpose(0, 2, 1, 3).astype(k.dtype),
+            dv.transpose(0, 2, 1, 3).astype(v.dtype))
 
 
 def _exact_attention(q, k, v, *, causal: bool):
@@ -33,8 +75,7 @@ def _exact_attention(q, k, v, *, causal: bool):
     return jax.vmap(
         lambda qq, kk, vv: attention_nhd_ref(qq, kk, vv, causal=causal,
                                              group=group)
-    )(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
-      v.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
+    )(_to_hsd(q), _to_hsd(k), _to_hsd(v)).transpose(0, 2, 1, 3)
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
@@ -46,7 +87,13 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     ``block_q``/``block_k`` default through the substrate cache keyed on
     (Sq, Sk) — tuned-table entries apply; the heuristic matches the old
     fixed 128 default (the kernel clamps to a divisor either way).  The
-    pick happens outside the jitted forward so tuned entries retrace.
+    pick happens outside the jitted forward so tuned entries retrace, and
+    is skipped entirely when both blocks are passed explicitly.
+
+    Differentiable: the backward pass is the fused recompute kernel pair
+    in ``kernel_bwd.py`` (its tiles resolve through the substrate under
+    the ``flash_attention.bwd`` key), or the exact VJP of the materialised
+    float reference when ``REPRO_FUSED_BWD=0``.
     """
     interpret = common.resolve_interpret(interpret)
     if block_q is None or block_k is None:
@@ -55,11 +102,30 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                                       max_rows=128, max_cols=128)
         block_q = block_q if block_q is not None else bq
         block_k = block_k if block_k is not None else bk
-    f = common.ste(
-        functools.partial(_fwd, causal=causal, block_q=block_q,
-                          block_k=block_k, interpret=interpret),
-        functools.partial(_exact_attention, causal=causal))
-    return f(q, k, v)
+    fwd = functools.partial(_fwd, causal=causal, block_q=block_q,
+                            block_k=block_k, interpret=interpret)
+    grad = functools.partial(_exact_attention, causal=causal)
+    fwd_res = bwd = None
+    if common.fused_backward_enabled():
+        # The backward keeps the head axis whole inside the tile, so the
+        # (hq, bq, bk) score tensor bounds the tile on TPU; off-TPU the
+        # interpreter wants the fewest grid steps it can get.
+        cap = 128 if common.on_tpu() else 512
+        bq_b, bk_b = common.pick_block_2d("flash_attention.bwd",
+                                          (q.shape[1], k.shape[1]), q.dtype,
+                                          max_rows=cap, max_cols=cap)
+
+        def fwd_res(q_, k_, v_):
+            out, lse = _fwd_res(q_, k_, v_, causal, block_q, block_k,
+                                interpret)
+            return out, (q_, k_, v_, out, lse)
+
+        def bwd(res, g):
+            q_, k_, v_, o_, lse = res
+            return _bwd_impl(q_, k_, v_, o_, lse, g, causal, bq_b, bk_b,
+                             interpret)
+
+    return common.fused_vjp(fwd, grad, fwd_res, bwd)(q, k, v)
 
 
 def _candidates(shape, dtype):
@@ -72,7 +138,26 @@ def _candidates(shape, dtype):
                  for bk in common.divisor_candidates(sk, 256, 3))
 
 
+def _bwd_candidates(shape, dtype):
+    """Backward tiles for the same (Sq, Sk) key.  The sweep spans small
+    tiles (VMEM-bound: the passes hold an all-heads (hq, bq, bk) score
+    tensor) through large ones (interpret-mode-bound: grid-step count);
+    candidates that overflow VMEM on device are skipped by autotune."""
+    sq, sk = shape
+    return tuple((bq, bk)
+                 for bq in common.divisor_candidates(sq, 512, 3)
+                 for bk in common.divisor_candidates(sk, 512, 3))
+
+
 common.register(common.KernelSpec(
     name="flash_attention", kernel=flash_attention_nhd,
     ref=attention_nhd_ref, grad=_exact_attention,
+    grad_kernel=flash_attention_bwd_nhd,
     candidates=_candidates, tags=("float", "attention")))
+
+# Backward tiles tune independently of the forward's: same cache-key
+# shape, own registry entry so `benchmarks.tune` sweeps it.
+common.register(common.KernelSpec(
+    name="flash_attention.bwd", kernel=flash_attention_bwd_nhd,
+    ref=attention_bwd_ref, candidates=_bwd_candidates,
+    tags=("float", "attention", "backward")))

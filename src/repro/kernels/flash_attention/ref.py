@@ -20,3 +20,14 @@ def attention_nhd_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("hqk,hkd->hqd", p,
                       vv.astype(jnp.float32)).astype(q.dtype)
+
+
+def attention_bwd_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                      do: jax.Array, *, causal: bool = True,
+                      group: int = 1):
+    """Exact (dq, dk, dv) via autodiff of the materialised reference —
+    the oracle for the fused backward kernels."""
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: attention_nhd_ref(q_, k_, v_, causal=causal,
+                                             group=group), q, k, v)
+    return vjp(do)

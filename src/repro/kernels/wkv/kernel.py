@@ -26,10 +26,21 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels import common
 
 
-def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_scr, *, bt: int):
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, *rest, bt: int,
+                with_ckpt: bool):
+    if with_ckpt:
+        c_ref, (s_scr,) = rest[0], rest[1:]
+    else:
+        c_ref, (s_scr,) = None, rest
+
     @pl.when(pl.program_id(1) == 0)
     def _init():
         s_scr[...] = jnp.zeros_like(s_scr)
+
+    if with_ckpt:
+        # State at this block's start: the checkpoint the reverse-time
+        # backward (kernel_bwd.py) restarts its in-block recompute from.
+        c_ref[0, 0] = s_scr[...]
 
     r = r_ref[0].astype(jnp.float32)   # (bt, dk)
     k = k_ref[0].astype(jnp.float32)
@@ -54,17 +65,31 @@ def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_scr, *, bt: int):
 
 def wkv_recurrence(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
                    u: jax.Array, *, block_t: int = 64,
-                   interpret: bool = True) -> jax.Array:
+                   interpret: bool = True,
+                   return_residuals: bool = False):
     """r/k/w: (BH, T, dk); v: (BH, T, dv); u: (BH, dk).  -> (BH, T, dv).
 
     T must tile by block_t; state starts at zero (training semantics — the
     decode path carries S explicitly in jnp, see models/ssm.py).
+    With ``return_residuals`` also returns the per-block-boundary state
+    checkpoints, (BH, T/bt, dk, dv) float32 — O(T/bt) states instead of
+    the O(T) a scan-based VJP would stash; the backward recomputes the
+    in-block states from them.
     """
     bh, t, dk = r.shape
     dv = v.shape[-1]
     bt = common.largest_divisor(t, block_t)
     grid = (bh, t // bt)
-    kernel = functools.partial(_wkv_kernel, bt=bt)
+    kernel = functools.partial(_wkv_kernel, bt=bt,
+                               with_ckpt=return_residuals)
+    out_specs = pl.BlockSpec((1, bt, dv), lambda b, i: (b, i, 0))
+    out_shape = jax.ShapeDtypeStruct((bh, t, dv), r.dtype)
+    if return_residuals:
+        out_specs = [out_specs,
+                     pl.BlockSpec((1, 1, dk, dv), lambda b, i: (b, i, 0, 0))]
+        out_shape = [out_shape,
+                     jax.ShapeDtypeStruct((bh, t // bt, dk, dv),
+                                          jnp.float32)]
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -75,8 +100,8 @@ def wkv_recurrence(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
             pl.BlockSpec((1, bt, dk), lambda b, i: (b, i, 0)),
             pl.BlockSpec((1, 1, dk), lambda b, i: (b, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, bt, dv), lambda b, i: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, t, dv), r.dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
         compiler_params=common.compiler_params("parallel", "arbitrary"),
         interpret=interpret,

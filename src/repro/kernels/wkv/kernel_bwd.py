@@ -1,0 +1,142 @@
+"""Pallas TPU kernel: fused wkv backward (reverse-time recurrence).
+
+Forward per token (state S (dk, dv), per-channel decay w):
+
+    y_t = r_t (S_t + diag(u) k_t v_t^T)      S_{t+1} = diag(w_t) S_t + k_t v_t^T
+
+The backward runs time *in reverse*, carrying the state adjoint
+A_t = dL/dS_t across blocks in VMEM scratch:
+
+    A_t = diag(w_t) A_{t+1} + r_t dy_t^T                (A after last token = 0)
+    dr_t = S_t dy_t + u ⊙ k_t (v_t·dy_t)
+    dk_t = r_t ⊙ u (v_t·dy_t) + A_{t+1} v_t
+    dv_t = (Σ_j r_j u_j k_j) dy_t + A_{t+1}^T k_t
+    dw_t = rowsum(A_{t+1} ⊙ S_t)
+    du  += r_t ⊙ k_t (v_t·dy_t)
+
+The forward states S_t it needs are *recomputed* inside each time block
+from the per-block checkpoints the forward emits under
+``return_residuals=True`` (kernel.py) — O(T/bt) checkpointed states
+instead of the O(T) a scan-based VJP stashes.  Grid (BH, T/bt) with the
+time axis sequential and **reversed through the index maps**: grid step i
+processes time block nt-1-i.  du accumulates into a per-(BH) output block
+revisited across the whole sweep.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import common
+
+
+def _wkv_bwd_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, dy_ref, c_ref,
+                    dr_ref, dk_ref, dv_ref, dw_ref, du_ref, a_scr, *,
+                    bt: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        a_scr[...] = jnp.zeros_like(a_scr)   # A after the final token
+        du_ref[...] = jnp.zeros_like(du_ref)
+
+    r = r_ref[0].astype(jnp.float32)    # (bt, dk)
+    k = k_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)    # (bt, dv)
+    dy = dy_ref[0].astype(jnp.float32)  # (bt, dv)
+    u = u_ref[0][0].astype(jnp.float32)  # (dk,) broadcast row
+    dk_dim, dv_dim = r.shape[1], v.shape[1]
+
+    # Recompute the in-block forward states from the block checkpoint:
+    # states[i] = S before token i of this block.
+    def fstep(i, carry):
+        s, states = carry
+        states = jax.lax.dynamic_update_slice(states, s[None], (i, 0, 0))
+        kv = k[i][:, None] * v[i][None, :]
+        return w[i][:, None] * s + kv, states
+
+    _, states = jax.lax.fori_loop(
+        0, bt, fstep,
+        (c_ref[0, 0], jnp.zeros((bt, dk_dim, dv_dim), jnp.float32)))
+
+    def bstep(j, carry):
+        a, drb, dkb, dvb, dwb, du = carry    # a = A_{t+1} for token t below
+        i = bt - 1 - j
+        s_i = jax.lax.dynamic_slice(states, (i, 0, 0),
+                                    (1, dk_dim, dv_dim))[0]
+        r_i, k_i, w_i, v_i, dy_i = r[i], k[i], w[i], v[i], dy[i]
+        vdy = jnp.sum(v_i * dy_i)
+        dr_i = (s_i @ dy_i[:, None])[:, 0] + u * k_i * vdy
+        du = du + r_i * k_i * vdy
+        dk_i = r_i * u * vdy + (a @ v_i[:, None])[:, 0]
+        dv_i = jnp.sum(r_i * u * k_i) * dy_i + (k_i[None, :] @ a)[0]
+        dw_i = jnp.sum(a * s_i, axis=1)
+        a = w_i[:, None] * a + r_i[:, None] * dy_i[None, :]
+        upd = jax.lax.dynamic_update_slice_in_dim
+        return (a, upd(drb, dr_i[None], i, 0), upd(dkb, dk_i[None], i, 0),
+                upd(dvb, dv_i[None], i, 0), upd(dwb, dw_i[None], i, 0), du)
+
+    zk = jnp.zeros((bt, dk_dim), jnp.float32)
+    zv = jnp.zeros((bt, dv_dim), jnp.float32)
+    a_fin, drb, dkb, dvb, dwb, du = jax.lax.fori_loop(
+        0, bt, bstep,
+        (a_scr[...], zk, zk, zv, zk, jnp.zeros((dk_dim,), jnp.float32)))
+    a_scr[...] = a_fin
+    dr_ref[0] = drb.astype(dr_ref.dtype)
+    dk_ref[0] = dkb.astype(dk_ref.dtype)
+    dv_ref[0] = dvb.astype(dv_ref.dtype)
+    dw_ref[0] = dwb.astype(dw_ref.dtype)
+    du_ref[0] += du
+
+
+def wkv_recurrence_bwd(r: jax.Array, k: jax.Array, v: jax.Array,
+                       w: jax.Array, u: jax.Array, dy: jax.Array,
+                       ckpt: jax.Array, *, block_t: int = 64,
+                       interpret: bool = True
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                  jax.Array, jax.Array]:
+    """Fused backward on the (BH, T, d) layout, all outputs float32.
+
+    r/k/w: (BH, T, dk); v/dy: (BH, T, dv); u: (BH, dk); ckpt: the
+    (BH, T/bt, dk, dv) block-boundary states from the forward's
+    ``return_residuals=True`` run — **block_t must match that run's** so
+    the checkpoints align.  Returns (dr, dk, dv, dw, du) with du (BH, dk).
+    """
+    bh, t, dk = r.shape
+    dv = v.shape[-1]
+    bt = common.largest_divisor(t, block_t)
+    nt = t // bt
+    assert ckpt.shape == (bh, nt, dk, dv), (ckpt.shape, (bh, nt, dk, dv))
+
+    # Reverse time through the index maps: grid step i -> block nt-1-i.
+    def rev(b, i, nt=nt):
+        return (b, nt - 1 - i, 0)
+
+    tk_spec = pl.BlockSpec((1, bt, dk), rev)
+    tv_spec = pl.BlockSpec((1, bt, dv), rev)
+    shapes = [jax.ShapeDtypeStruct((bh, t, dk), jnp.float32),
+              jax.ShapeDtypeStruct((bh, t, dk), jnp.float32),
+              jax.ShapeDtypeStruct((bh, t, dv), jnp.float32),
+              jax.ShapeDtypeStruct((bh, t, dk), jnp.float32),
+              jax.ShapeDtypeStruct((bh, dk), jnp.float32)]
+    return pl.pallas_call(
+        functools.partial(_wkv_bwd_kernel, bt=bt),
+        grid=(bh, nt),
+        in_specs=[
+            tk_spec, tk_spec, tv_spec, tk_spec,
+            pl.BlockSpec((1, 1, dk), lambda b, i: (b, 0, 0)),
+            tv_spec,
+            pl.BlockSpec((1, 1, dk, dv),
+                         lambda b, i, nt=nt: (b, nt - 1 - i, 0, 0)),
+        ],
+        out_specs=[tk_spec, tk_spec, tv_spec, tk_spec,
+                   pl.BlockSpec((1, dk), lambda b, i: (b, 0))],
+        out_shape=shapes,
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        compiler_params=common.compiler_params("parallel", "arbitrary"),
+        interpret=interpret,
+    )(r, k, v, w, u.reshape(bh, 1, dk), dy, ckpt)

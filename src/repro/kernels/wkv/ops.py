@@ -9,12 +9,18 @@ import jax.numpy as jnp
 
 from repro.kernels import common
 from repro.kernels.wkv.kernel import wkv_recurrence
-from repro.kernels.wkv.ref import wkv_recurrence_ref
+from repro.kernels.wkv.kernel_bwd import wkv_recurrence_bwd
+from repro.kernels.wkv.ref import wkv_bwd_ref, wkv_recurrence_ref
 
 
 def _flat(x):
     b, t, h, d = x.shape
     return x.transpose(0, 2, 1, 3).reshape(b * h, t, d)
+
+
+def _unflat(x, b, h):
+    bh, t, d = x.shape
+    return x.reshape(b, h, t, d).transpose(0, 2, 1, 3)
 
 
 @functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
@@ -23,7 +29,48 @@ def _fwd(r, k, v, w, u, block_t: int, interpret: bool):
     uu = jnp.tile(u[None], (b, 1, 1)).reshape(b * h, d)
     out = wkv_recurrence(_flat(r), _flat(k), _flat(v), _flat(w), uu,
                          block_t=block_t, interpret=interpret)
-    return out.reshape(b, h, t, d).transpose(0, 2, 1, 3)
+    return _unflat(out, b, h)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def _fwd_res(r, k, v, w, u, block_t: int, interpret: bool):
+    """Forward also emitting block-boundary state checkpoints."""
+    b, t, h, d = r.shape
+    uu = jnp.tile(u[None], (b, 1, 1)).reshape(b * h, d)
+    out, ckpt = wkv_recurrence(_flat(r), _flat(k), _flat(v), _flat(w), uu,
+                               block_t=block_t, interpret=interpret,
+                               return_residuals=True)
+    return _unflat(out, b, h), ckpt
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def _bwd_impl(r, k, v, w, u, ckpt, dy, block_t: int, interpret: bool):
+    """Fused backward on the public layout; cotangents in primal dtypes."""
+    b, t, h, d = r.shape
+    uu = jnp.tile(u[None], (b, 1, 1)).reshape(b * h, d)
+    dr, dk, dv, dw, du = wkv_recurrence_bwd(
+        _flat(r), _flat(k), _flat(v), _flat(w), uu, _flat(dy), ckpt,
+        block_t=block_t, interpret=interpret)
+    return (_unflat(dr, b, h).astype(r.dtype),
+            _unflat(dk, b, h).astype(k.dtype),
+            _unflat(dv, b, h).astype(v.dtype),
+            _unflat(dw, b, h).astype(w.dtype),
+            du.reshape(b, h, d).sum(0).astype(u.dtype))
+
+
+def bwd_block_cap(d: int, on_tpu: Optional[bool] = None) -> int:
+    """Heuristic cap for the training-path time block.
+
+    The backward stashes block_t recomputed (dk, dv) states at once, so
+    the cap bounds that buffer: ~1 MB on TPU VMEM, ~4 MB in interpret
+    mode (where fewer grid steps win).  Shared with benchmarks so
+    reported residual-memory estimates match the blocks that actually
+    ran.
+    """
+    if on_tpu is None:
+        on_tpu = common.on_tpu()
+    budget = (1 << 18) if on_tpu else (1 << 20)
+    return max(16, min(512, budget // max(1, d * d)))
 
 
 def _exact_wkv(r, k, v, w, u):
@@ -31,7 +78,7 @@ def _exact_wkv(r, k, v, w, u):
     b, t, h, d = r.shape
     uu = jnp.tile(u[None], (b, 1, 1)).reshape(b * h, d)
     out = wkv_recurrence_ref(_flat(r), _flat(k), _flat(v), _flat(w), uu)
-    return out.reshape(b, h, t, d).transpose(0, 2, 1, 3)
+    return _unflat(out, b, h)
 
 
 def wkv(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
@@ -41,15 +88,37 @@ def wkv(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
 
     ``block_t`` defaults through the substrate cache keyed on (T, d) —
     tuned-table entries apply; the heuristic matches the old fixed 64
-    default (the kernel clamps to a divisor of T either way)."""
+    default (the kernel clamps to a divisor of T either way); the pick is
+    skipped when the block is passed explicitly.
+
+    Differentiable: the backward pass is the fused reverse-time kernel in
+    ``kernel_bwd.py``, restarted from per-block state checkpoints the
+    forward emits.  Checkpoint spacing must match the backward's time
+    block, so under differentiation both passes run with the block
+    resolved under the ``wkv.bwd`` substrate key (tuned independently of
+    the inference-path ``wkv`` key).  ``REPRO_FUSED_BWD=0`` falls back to
+    the exact VJP of the float scan reference.
+    """
     interpret = common.resolve_interpret(interpret)
     if block_t is None:
         block_t = common.pick_block_rows("wkv", (r.shape[1], r.shape[3]),
                                          r.dtype, max_rows=64)
-    f = common.ste(
-        functools.partial(_fwd, block_t=block_t, interpret=interpret),
-        _exact_wkv)
-    return f(r, k, v, w, u)
+    fwd = functools.partial(_fwd, block_t=block_t, interpret=interpret)
+    fwd_res = bwd = None
+    if common.fused_backward_enabled():
+        bt_b = common.pick_block_rows("wkv.bwd", (r.shape[1], r.shape[3]),
+                                      r.dtype,
+                                      max_rows=bwd_block_cap(r.shape[3]))
+
+        def fwd_res(r_, k_, v_, w_, u_):
+            out, ckpt = _fwd_res(r_, k_, v_, w_, u_, bt_b, interpret)
+            return out, (r_, k_, v_, w_, u_, ckpt)
+
+        def bwd(res, g):
+            r_, k_, v_, w_, u_, ckpt = res
+            return _bwd_impl(r_, k_, v_, w_, u_, ckpt, g, bt_b, interpret)
+
+    return common.fused_vjp(fwd, _exact_wkv, fwd_res, bwd)(r, k, v, w, u)
 
 
 def _candidates(shape, dtype):
@@ -59,6 +128,22 @@ def _candidates(shape, dtype):
     return tuple((bt, d) for bt in common.divisor_candidates(t, 128, 4))
 
 
+def _bwd_candidates(shape, dtype):
+    """Backward time blocks for the same (T, d) key.  The backward holds
+    bt recomputed (dk, dv) states in VMEM at once, so small blocks bound
+    VMEM (device) and large ones bound grid steps (interpret); autotune
+    skips candidates that overflow on device."""
+    t, d = shape
+    return tuple((bt, d) for bt in common.divisor_candidates(t, 512, 4))
+
+
 common.register(common.KernelSpec(
     name="wkv", kernel=wkv_recurrence, ref=wkv_recurrence_ref,
-    grad=_exact_wkv, candidates=_candidates, tags=("float", "recurrent")))
+    grad=_exact_wkv, grad_kernel=wkv_recurrence_bwd,
+    candidates=_candidates, tags=("float", "recurrent")))
+
+# Training-path time block (shared by the residual forward and the
+# reverse sweep): own registry entry so `benchmarks.tune` sweeps it.
+common.register(common.KernelSpec(
+    name="wkv.bwd", kernel=wkv_recurrence_bwd, ref=wkv_bwd_ref,
+    candidates=_bwd_candidates, tags=("float", "recurrent", "backward")))

@@ -27,3 +27,11 @@ def wkv_recurrence_ref(r: jax.Array, k: jax.Array, v: jax.Array,
         return out
 
     return jax.vmap(one)(r, k, v, w, u.astype(jnp.float32)).astype(r.dtype)
+
+
+def wkv_bwd_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                u: jax.Array, dy: jax.Array):
+    """Exact (dr, dk, dv, dw, du) via autodiff of the scan reference —
+    the oracle for the fused backward kernel."""
+    _, vjp = jax.vjp(wkv_recurrence_ref, r, k, v, w, u)
+    return vjp(dy)
