@@ -1,6 +1,6 @@
 """Benchmark harness - one function per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [SUITE | --only NAME]
 
 Prints ``name,us_per_call,derived`` CSV rows:
   * pareto_*    - Figs 4/5/6 error sweeps + knee detection
@@ -15,6 +15,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * grads_*     - fused Pallas backward vs STE fallback (smoke) for the
                   float families.  Full sweep with long-context shapes:
                   ``python -m benchmarks.grad_bench``.
+  * serve_*     - continuous batching vs gang scheduling on an arrival
+                  trace (smoke); writes ``BENCH_serving.json``.  Full
+                  replay: ``python -m benchmarks.serve_bench``.
 """
 from __future__ import annotations
 
@@ -23,15 +26,20 @@ import sys
 import traceback
 
 
+SUITE_NAMES = ("pareto", "mac", "caesar", "accuracy", "roofline", "tune",
+               "grads", "serve")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None,
-                    help="pareto|mac|caesar|accuracy|roofline|tune|grads")
+    ap.add_argument("suite", nargs="?", default=None, choices=SUITE_NAMES,
+                    help="run a single suite (same choices as --only)")
+    ap.add_argument("--only", default=None, choices=SUITE_NAMES)
     args = ap.parse_args(argv)
 
     from benchmarks import (accuracy_bench, caesar_bench, grad_bench,
                             mac_bench, pareto_bench, roofline_bench,
-                            tune_bench)
+                            serve_bench, tune_bench)
     suites = {
         "pareto": pareto_bench.run,
         "mac": mac_bench.run,
@@ -40,9 +48,11 @@ def main(argv=None):
         "roofline": roofline_bench.run,
         "tune": tune_bench.run,
         "grads": grad_bench.run,
+        "serve": serve_bench.run,
     }
-    if args.only:
-        suites = {args.only: suites[args.only]}
+    only = args.only or args.suite
+    if only:
+        suites = {only: suites[only]}
 
     rows = []
     failed = 0

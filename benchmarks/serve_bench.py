@@ -1,0 +1,180 @@
+"""Serving benchmark: continuous batching vs the gang scheduler.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench [--smoke] [--out BENCH_serving.json]
+
+Replays a Poisson-ish arrival trace of mixed prompt/output lengths —
+exponential inter-arrival gaps, prompt lengths spanning several shape
+buckets, ``max_new_tokens`` drawn from a short/long mix — through both
+engines in ``runtime/serve_loop.py``:
+
+  * ``ServeEngine`` — slot-based continuous batching (bucketed shapes,
+    retire-and-refill every decode step)
+  * ``GangServeEngine`` — the old lockstep baseline (per-composition
+    retraces, batch drains at the speed of its slowest request)
+
+and writes ``BENCH_serving.json`` with token throughput (delivered
+tokens/s over the whole replay, compiles included — reuse vs retrace *is*
+the comparison), p50/p99 request latency from virtual arrival to
+completion, slot occupancy, and the continuous/gang speedup.  The CI
+``serve-smoke`` lane gates on this file: no replayed request may be
+dropped, and throughput must stay within 2x of
+``benchmarks/serving_baseline.json``.
+
+Also registered as the ``serve`` suite of ``benchmarks/run.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+import jax
+
+from repro.configs import get_arch
+from repro.kernels import tuning
+from repro.models.model_zoo import build_model
+from repro.runtime.serve_loop import GangServeEngine, Request, ServeEngine
+
+
+def make_trace(cfg, n_requests: int, seed: int = 0, rate_hz: float = 50.0,
+               len_range=(3, 30), max_new_choices=(2, 4, 8, 24)
+               ) -> List[Request]:
+    """Poisson-ish arrivals, mixed prompt lengths, short/long outputs."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    reqs = []
+    for i in range(n_requests):
+        t += float(rng.exponential(1.0 / rate_hz))
+        n = int(rng.integers(*len_range))
+        if cfg.input_kind == "tokens":
+            prompt = rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+        else:
+            prompt = rng.standard_normal((n, cfg.d_model)).astype(np.float32)
+        reqs.append(Request(i, prompt, arrival_s=t,
+                            max_new_tokens=int(rng.choice(max_new_choices))))
+    return reqs
+
+
+def _replay(engine, requests: List[Request]) -> Dict[str, Any]:
+    t0 = time.perf_counter()
+    done = engine.serve(requests)
+    wall = time.perf_counter() - t0
+    delivered = sum(len(r.output) for r in done if r.output is not None)
+    expected = sum(r.max_new_tokens for r in requests)
+    lat = sorted(1e3 * (r.done_at - r.submitted_at) for r in done)
+    pick = lambda q: lat[min(len(lat) - 1, int(q * len(lat)))] if lat else 0.0
+    stats = {
+        "requests": len(requests),
+        "completed": len(done),
+        "dropped": len(requests) - len(done)
+        + sum(1 for r in done
+              if r.output is None or len(r.output) < r.max_new_tokens),
+        "delivered_tokens": delivered,
+        "expected_tokens": expected,
+        "wall_s": round(wall, 3),
+        "tok_s": round(delivered / max(wall, 1e-9), 1),
+        "latency_p50_ms": round(pick(0.50), 1),
+        "latency_p99_ms": round(pick(0.99), 1),
+    }
+    m = getattr(engine, "metrics", {})
+    if "slot_occupancy" in m:
+        stats["slot_occupancy"] = round(m["slot_occupancy"], 3)
+        stats["queue_wait_s"] = round(m["queue_wait_s"], 3)
+        stats["decode_steps"] = int(m["decode_steps"])
+    return stats
+
+
+def sweep(smoke: bool = False, out_path: Optional[str] = None,
+          arch: str = "glm4-9b", n_requests: Optional[int] = None,
+          max_batch: int = 4, max_seq: int = 64, seed: int = 0
+          ) -> Dict[str, Any]:
+    cfg = get_arch(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    # smoke stays CI-sized but large enough that steady-state decode (the
+    # thing continuous batching improves) dominates one-off compile time
+    n = n_requests if n_requests is not None else (32 if smoke else 48)
+
+    # fresh Request objects per engine: engines mutate timing fields
+    gang = GangServeEngine(model, params, max_batch=max_batch,
+                           max_seq=max_seq)
+    gang_stats = _replay(gang, make_trace(cfg, n, seed=seed))
+
+    cont = ServeEngine(model, params, max_batch=max_batch, max_seq=max_seq)
+    cont_stats = _replay(cont, make_trace(cfg, n, seed=seed))
+
+    report = {
+        "meta": {**tuning.version_stamp(), "smoke": smoke, "arch": arch,
+                 "max_batch": max_batch, "max_seq": max_seq,
+                 "n_requests": n, "seed": seed,
+                 # span of virtual arrivals: when walls approach this the
+                 # replay is arrival-bound, not compute-bound, and the
+                 # continuous/gang ratio converges to 1 by construction
+                 "arrival_span_s": round(
+                     max(r.arrival_s for r in make_trace(cfg, n, seed=seed)),
+                     3)},
+        "continuous": cont_stats,
+        "gang": gang_stats,
+        "speedup_tok_s": round(
+            cont_stats["tok_s"] / max(gang_stats["tok_s"], 1e-9), 3),
+        "prefill_traces": int(cont.trace_counts["prefill"]),
+        "decode_traces": int(cont.trace_counts["decode"]),
+    }
+    if out_path:
+        with open(out_path, "w", encoding="utf-8") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+    return report
+
+
+def run(csv_rows):
+    """`benchmarks.run` suite entry: smoke trace, writes BENCH_serving.json."""
+    report = sweep(smoke=True, out_path="BENCH_serving.json")
+    for name in ("continuous", "gang"):
+        s = report[name]
+        us = 1e6 * s["wall_s"] / max(s["delivered_tokens"], 1)
+        csv_rows.append((
+            f"serve_{name}_{report['meta']['arch']}", us,
+            f"tok_s={s['tok_s']};p50_ms={s['latency_p50_ms']};"
+            f"p99_ms={s['latency_p99_ms']};dropped={s['dropped']}"))
+    csv_rows.append((
+        "serve_speedup", 0.0,
+        f"continuous_over_gang={report['speedup_tok_s']};"
+        f"occupancy={report['continuous'].get('slot_occupancy', 0)}"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Continuous-batching vs gang-scheduler serving "
+                    "benchmark (arrival-trace replay).")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small trace (CI lane)")
+    ap.add_argument("--arch", default="glm4-9b")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_serving.json",
+                    help="report path ('' to skip)")
+    args = ap.parse_args(argv)
+    report = sweep(smoke=args.smoke, out_path=args.out or None,
+                   arch=args.arch, n_requests=args.requests,
+                   max_batch=args.max_batch, max_seq=args.max_seq,
+                   seed=args.seed)
+    print("engine,tok_s,p50_ms,p99_ms,occupancy,dropped")
+    for name in ("continuous", "gang"):
+        s = report[name]
+        print(f"{name},{s['tok_s']},{s['latency_p50_ms']},"
+              f"{s['latency_p99_ms']},{s.get('slot_occupancy', '')},"
+              f"{s['dropped']}")
+    print(f"# speedup (continuous/gang): {report['speedup_tok_s']}x; "
+          f"prefill traces {report['prefill_traces']}, "
+          f"decode traces {report['decode_traces']}")
+    return 0 if report["continuous"]["dropped"] == 0 else 1
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -1,55 +1,67 @@
-"""Continuous-batching serving demo (deliverable (b): serve a small model
-with batched requests).
+"""Continuous-batching serving demo: replay an arrival trace through the
+slot-based engine (deliverable (b): serve a small model with batched
+requests).
 
-    PYTHONPATH=src python examples/serve_batch.py [--arch rwkv6-3b]
+    PYTHONPATH=src python examples/serve_batch.py [--arch rwkv6-3b] [--gang]
 
-Uses the reduced config of any assigned architecture; measures prefill and
-decode throughput of the engine.
+Requests arrive over time (Poisson-ish gaps), are admitted into free
+decode slots as they arrive, and retire the moment their budget is done —
+the engine reports throughput, latency percentiles, queue wait and slot
+occupancy.  ``--gang`` replays the same trace through the old lockstep
+scheduler for comparison (see also ``python -m benchmarks.serve_bench``).
 """
 import argparse
+import pathlib
 import sys
 import time
 
-sys.path.insert(0, "src")
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(_ROOT / "src"))
+sys.path.insert(0, str(_ROOT))  # benchmarks package (shared make_trace)
 
 import jax
 import numpy as np
 
+from benchmarks.serve_bench import make_trace
 from repro.configs import get_arch
 from repro.models.model_zoo import build_model
-from repro.runtime.serve_loop import Request, ServeEngine
+from repro.runtime.serve_loop import GangServeEngine, ServeEngine
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="glm4-9b")
-    ap.add_argument("--requests", type=int, default=12)
-    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--gang", action="store_true",
+                    help="use the old lockstep scheduler instead")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    engine = ServeEngine(model, params, max_batch=4)
-    rng = np.random.default_rng(0)
-    reqs = []
-    for i in range(args.requests):
-        n = int(rng.integers(4, 20))
-        if cfg.input_kind == "tokens":
-            prompt = rng.integers(0, cfg.vocab_size, n).astype(np.int32)
-        else:
-            prompt = rng.standard_normal((n, cfg.d_model)).astype(np.float32)
-        reqs.append(Request(i, prompt, max_new_tokens=args.max_new))
+    cls = GangServeEngine if args.gang else ServeEngine
+    engine = cls(model, params, max_batch=args.max_batch,
+                 max_seq=args.max_seq)
+    reqs = make_trace(cfg, args.requests)
     t0 = time.time()
     done = engine.serve(reqs)
     dt = time.time() - t0
     lat = [1e3 * (r.done_at - r.submitted_at) for r in done]
-    print(f"{args.arch} (reduced): {len(done)} requests in {dt:.2f}s")
+    toks = sum(len(r.output) for r in done)
+    name = "gang" if args.gang else "continuous"
+    print(f"{args.arch} (reduced, {name}): {len(done)} requests in {dt:.2f}s"
+          f" -> {toks / dt:.1f} tok/s")
     print(f"  prefill {engine.metrics['prefill_tokens']} tok, "
-          f"decode {engine.metrics['decode_tokens']} tok "
-          f"({engine.metrics['decode_tokens']/dt:.1f} tok/s)")
+          f"decode {engine.metrics['decode_tokens']} tok")
     print(f"  latency p50={np.percentile(lat, 50):.0f}ms "
-          f"p95={np.percentile(lat, 95):.0f}ms")
+          f"p99={np.percentile(lat, 99):.0f}ms")
+    if not args.gang:
+        print(f"  queue wait {engine.metrics['queue_wait_s'] * 1e3:.0f}ms, "
+              f"slot occupancy {engine.metrics['slot_occupancy']:.0%}, "
+              f"{engine.trace_counts['prefill']} prefill trace(s) over "
+              f"{engine.metrics['decode_steps']} decode steps")
 
 
 if __name__ == "__main__":

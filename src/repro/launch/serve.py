@@ -13,7 +13,7 @@ import numpy as np
 
 from repro.configs import CORDIC_EXEC, get_arch
 from repro.models.model_zoo import build_model
-from repro.runtime.serve_loop import Request, ServeEngine
+from repro.runtime.serve_loop import GangServeEngine, Request, ServeEngine
 
 
 def main(argv=None):
@@ -23,7 +23,10 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=256)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--gang", action="store_true",
+                    help="use the old lockstep scheduler")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -31,7 +34,9 @@ def main(argv=None):
         cfg = cfg.reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
-    engine = ServeEngine(model, params, max_batch=args.max_batch)
+    cls = GangServeEngine if args.gang else ServeEngine
+    engine = cls(model, params, max_batch=args.max_batch,
+                 max_seq=args.max_seq)
     rng = np.random.default_rng(args.seed)
     reqs = []
     for i in range(args.requests):
@@ -48,10 +53,13 @@ def main(argv=None):
         print(f"req {r.rid}: prompt {len(r.prompt)} toks -> "
               f"{list(r.output[:8])}{'...' if len(r.output) > 8 else ''} "
               f"({(r.done_at - r.submitted_at) * 1e3:.0f} ms)")
-    tput = engine.metrics["decode_tokens"] / dt
+    tput = sum(len(r.output) for r in done) / dt
     print(f"# {engine.metrics['prefill_tokens']} prefill toks, "
           f"{engine.metrics['decode_tokens']} decode toks, "
-          f"{tput:.1f} decode tok/s")
+          f"{tput:.1f} tok/s")
+    if not args.gang:
+        print(f"# queue wait {engine.metrics['queue_wait_s'] * 1e3:.0f}ms, "
+              f"slot occupancy {engine.metrics['slot_occupancy']:.0%}")
     return 0
 
 

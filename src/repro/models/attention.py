@@ -170,6 +170,11 @@ def decode_attention(q: Array, k_new: Array, v_new: Array, cache_k: Array,
                      pol: ExecutionPolicy, window) -> Tuple[Array, Array, Array]:
     """q/k_new/v_new: (B,1,H*,dh); cache: (B,S,Hkv,dh) ring-written at pos.
 
+    ``pos`` is the tokens-seen counter: a scalar (every row at the same
+    position — the classic single-stream path) or a ``(B,)`` vector (the
+    serving engine's per-slot positions, where each decode slot was
+    prefilled at a different time and length).
+
     Returns (ctx (B,1,Hq,dh), cache_k, cache_v).
     """
     b, _, hq, dh = q.shape
@@ -178,8 +183,18 @@ def decode_attention(q: Array, k_new: Array, v_new: Array, cache_k: Array,
     quant = cache_k.dtype == jnp.int8
     k_w = quantize_kv(k_new) if quant else k_new.astype(cache_k.dtype)
     v_w = quantize_kv(v_new) if quant else v_new.astype(cache_v.dtype)
-    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_w, slot, axis=1)
-    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_w, slot, axis=1)
+    per_row = jnp.ndim(pos) == 1
+    if per_row:
+        # batched scatter: each row's new K/V lands at its own column
+        # (a one-column write, not a full-cache select)
+        rows = jnp.arange(b)
+        cache_k = cache_k.at[rows, slot].set(k_w[:, 0])
+        cache_v = cache_v.at[rows, slot].set(v_w[:, 0])
+    else:
+        cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_w, slot,
+                                                      axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_w, slot,
+                                                      axis=1)
     hkv = cache_k.shape[2]
     g = hq // hkv
     qg = q.reshape(b, 1, hkv, g, dh)
@@ -189,12 +204,15 @@ def decode_attention(q: Array, k_new: Array, v_new: Array, cache_k: Array,
     #   p_t = t            if t <= pos (current wrap)  [no-wrap case]
     # with wrapping, valid entries are the last min(pos+1, s_max) writes.
     t = jnp.arange(s_max)
-    age = jnp.mod(pos - t, s_max)          # 0 = newest
-    valid = age < jnp.minimum(pos + 1, s_max)
+    age = jnp.mod((pos[:, None] if per_row else pos) - t, s_max)  # 0 = newest
+    valid = age < jnp.minimum((pos[:, None] if per_row else pos) + 1, s_max)
     in_window = age < window
     mask = jnp.logical_and(valid, in_window)
-    scores = jnp.where(mask[None, None, None, None, :],
-                       scores.astype(jnp.float32), NEG_INF)
+    if per_row:                             # (B, S): own history per slot
+        mask = mask[:, None, None, None, :]
+    else:
+        mask = mask[None, None, None, None, :]
+    scores = jnp.where(mask, scores.astype(jnp.float32), NEG_INF)
     probs = L.softmax(scores, pol).astype(q.dtype)
     ctx = jnp.einsum("bkgst,btkd->bskgd", probs, dequantize_kv(cache_v, q.dtype))
     return ctx.reshape(b, 1, hq, dh), cache_k, cache_v

@@ -48,8 +48,12 @@ class Model:
     def loss(self, params, batch, pol: Optional[ExecutionPolicy] = None):
         return T.loss_fn(params, batch, self.cfg, pol)
 
-    def prefill(self, params, batch, pol: Optional[ExecutionPolicy] = None):
-        return T.prefill(params, batch, self.cfg, pol)
+    def prefill(self, params, batch, pol: Optional[ExecutionPolicy] = None,
+                headroom: int = 64, lengths=None):
+        """``lengths`` (B,): true prompt lengths of a right-padded batch
+        (serving shape buckets); see :func:`repro.models.transformer.prefill`."""
+        return T.prefill(params, batch, self.cfg, pol, headroom=headroom,
+                         lengths=lengths)
 
     def decode_step(self, params, state, batch,
                     pol: Optional[ExecutionPolicy] = None):
@@ -58,6 +62,21 @@ class Model:
     def init_decode_state(self, batch: int, max_seq: int,
                           abstract: bool = False):
         return T.init_decode_state(self.cfg, batch, max_seq, abstract)
+
+    # -- serving slots (continuous batching) --------------------------------
+    def init_slot_state(self, max_batch: int, max_seq: int,
+                        abstract: bool = False):
+        """Persistent decode-slot state with a per-slot ``pos`` vector."""
+        return T.init_slot_state(self.cfg, max_batch, max_seq, abstract)
+
+    def slot_update(self, state, sub, slots):
+        """Insert a prefill's per-request state into decode slots.
+
+        The state-scatter seam of the continuous-batching engine: works for
+        attention KV caches and recurrent (rwkv/mamba) state alike.  Slot
+        indices >= max_batch are dropped (admission-group padding).
+        """
+        return T.slot_update(state, sub, slots)
 
     # -- inputs -------------------------------------------------------------
     def input_specs(self, batch: int, seq: int, kind: str = "train"

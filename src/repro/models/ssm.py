@@ -44,13 +44,33 @@ def _token_shift(x: Array, x_prev: Array) -> Array:
     return jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
 
 
+def _last_valid(x: Array, lengths) -> Array:
+    """x[:, n-1, :] per row — the boundary token carried into decode.
+
+    With ``lengths=None`` (unpadded sequences) this is just ``x[:, -1]``;
+    for right-padded serving prefill it gathers each row's last *real*
+    position so the carried token-shift state matches single-stream decode.
+    """
+    if lengths is None:
+        return x[:, -1, :]
+    idx = (lengths - 1).astype(jnp.int32)[:, None, None]
+    return jnp.take_along_axis(x, jnp.broadcast_to(
+        idx, (x.shape[0], 1, x.shape[2])), axis=1)[:, 0, :]
+
+
 def rwkv6_timemix(x: Array, p: Rwkv6Params, cfg: ArchConfig,
-                  pol: ExecutionPolicy, state: Tuple[Array, Array]
+                  pol: ExecutionPolicy, state: Tuple[Array, Array],
+                  mask: Array = None, lengths: Array = None
                   ) -> Tuple[Array, Tuple[Array, Array]]:
     """x: (B, T, D).  state = (x_boundary (B, D), S (B, H, dk, dv)).
 
     Returns (out (B,T,D), new state).  wkv recurrence per head:
         out_t = (r_t ( S + (u*k_t) v_t^T )) ; S <- diag(w_t) S + k_t v_t^T
+
+    ``mask`` (B, T) marks real tokens in a right-padded batch: pad steps
+    carry S through unchanged (decay forced to 1, k to 0), so the carried
+    state is bit-identical to running the unpadded sequence; ``lengths``
+    picks each row's last real token for the token-shift boundary.
     """
     b, t, d = x.shape
     h = cfg.n_heads
@@ -69,6 +89,11 @@ def rwkv6_timemix(x: Array, p: Rwkv6Params, cfg: ArchConfig,
     logw = -jnp.exp(jnp.clip(p.w0.astype(jnp.float32) + dd, -8.0, 2.0))
     w = jnp.exp(logw).reshape(b, t, h, dk)                     # decay in (0,1)
     u = p.bonus.astype(jnp.float32)                            # (H, dk)
+    if mask is not None:
+        # pad steps are state no-ops: S <- 1*S + 0*v^T (exact)
+        m = mask[:, :, None, None]
+        w = jnp.where(m, w, jnp.ones((), w.dtype))
+        k = jnp.where(m, k, jnp.zeros((), k.dtype))
 
     chunk = max(1, min(64, t))
     assert t % chunk == 0
@@ -102,7 +127,7 @@ def rwkv6_timemix(x: Array, p: Rwkv6Params, cfg: ArchConfig,
     out = out.reshape(b, t, d) * p.ln_w.astype(jnp.float32)
     out = (out.astype(x.dtype) * L.af(g, "silu", pol))
     out = L.dense(out, p.wo, pol)
-    return out, (x[:, -1, :], S)
+    return out, (_last_valid(x, lengths), S)
 
 
 class Rwkv6ChannelParams(NamedTuple):
@@ -114,8 +139,8 @@ class Rwkv6ChannelParams(NamedTuple):
 
 
 def rwkv6_channelmix(x: Array, p: Rwkv6ChannelParams, cfg: ArchConfig,
-                     pol: ExecutionPolicy, x_prev: Array
-                     ) -> Tuple[Array, Array]:
+                     pol: ExecutionPolicy, x_prev: Array,
+                     lengths: Array = None) -> Tuple[Array, Array]:
     xs = _token_shift(x, x_prev)
     xk = x + (xs - x) * p.mu_k.astype(x.dtype)
     xr = x + (xs - x) * p.mu_r.astype(x.dtype)
@@ -123,7 +148,7 @@ def rwkv6_channelmix(x: Array, p: Rwkv6ChannelParams, cfg: ArchConfig,
     k = k * k                                        # squared ReLU
     kv = L.dense(k, p.wv, pol)
     r = L.af(L.dense(xr, p.wr, pol), "sigmoid", pol)
-    return r * kv, x[:, -1, :]
+    return r * kv, _last_valid(x, lengths)
 
 
 # ---------------------------------------------------------------------------
@@ -140,9 +165,15 @@ class MambaParams(NamedTuple):
 
 
 def mamba_mix(x: Array, p: MambaParams, cfg: ArchConfig,
-              pol: ExecutionPolicy, state: Tuple[Array, Array]
+              pol: ExecutionPolicy, state: Tuple[Array, Array],
+              mask: Array = None, lengths: Array = None
               ) -> Tuple[Array, Tuple[Array, Array]]:
-    """x: (B,T,D).  state = (conv tail (B, K-1, Di), h (B, Di, N))."""
+    """x: (B,T,D).  state = (conv tail (B, K-1, Di), h (B, Di, N)).
+
+    ``mask``/``lengths`` as in :func:`rwkv6_timemix`: pad steps of a
+    right-padded batch are forced to state no-ops (decay 1, drive 0) and
+    the carried conv tail is gathered at each row's last real positions.
+    """
     b, t, d = x.shape
     n = cfg.ssm_state
     conv_tail, h0 = state
@@ -162,7 +193,14 @@ def mamba_mix(x: Array, p: MambaParams, cfg: ArchConfig,
     conv = sum(xi_pad[:, i:i + t, :] * p.conv_w[i].astype(xi.dtype)
                for i in range(kk))
     conv = L.af(conv, "silu", pol)
-    new_tail = xi_pad[:, t:t + kk - 1, :] if kk > 1 else conv_tail
+    if kk == 1:
+        new_tail = conv_tail
+    elif lengths is None:
+        new_tail = xi_pad[:, t:t + kk - 1, :]
+    else:
+        # last kk-1 *real* inputs per row: xi_pad cols [n, n + kk - 1)
+        idx = lengths.astype(jnp.int32)[:, None] + jnp.arange(kk - 1)[None]
+        new_tail = jnp.take_along_axis(xi_pad, idx[..., None], axis=1)
 
     bc = L.dense(conv, p.w_bc, pol).astype(jnp.float32)
     b_t, c_t, dt = bc[..., :n], bc[..., n:2 * n], bc[..., -1:]
@@ -172,6 +210,11 @@ def mamba_mix(x: Array, p: MambaParams, cfg: ArchConfig,
     decay = jnp.exp(dt[..., None] * a[None, None, :, :])
     drive = (dt[..., None] * b_t[:, :, None, :]) * conv.astype(
         jnp.float32)[..., None]                       # (B,T,Di,N)
+    if mask is not None:
+        # pad steps are state no-ops: h <- 1*h + 0 (exact)
+        m = mask[:, :, None, None]
+        decay = jnp.where(m, decay, jnp.ones((), decay.dtype))
+        drive = jnp.where(m, drive, jnp.zeros((), drive.dtype))
 
     chunk = max(1, min(64, t))
     assert t % chunk == 0

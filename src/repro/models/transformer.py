@@ -349,6 +349,7 @@ def decode_step(params: Dict[str, Any], state: DecodeState,
         x = batch["frames"].astype(_dt(cfg)) @ params["frame_adapter"]
     b = x.shape[0]
     pos = state.pos
+    per_row = jnp.ndim(pos) == 1            # serving slots: own pos per row
     if state.cache_k is not None:
         cache_len = state.cache_k.shape[2]
         if cfg.sliding_window and cache_len <= cfg.sliding_window:
@@ -374,7 +375,8 @@ def decode_step(params: Dict[str, Any], state: DecodeState,
         bp, ck, cv, win = xs[0], xs[1], xs[2], xs[3]
         extra = xs[4:]
         h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
-        positions = jnp.full((1,), pos, jnp.int32)
+        positions = (pos[:, None].astype(jnp.int32) if per_row
+                     else jnp.full((1,), pos, jnp.int32))
         q, k, v = A.qkv(h, _attn_params(bp, cfg), cfg, pol, positions)
         ctx, ck2, cv2 = A.decode_attention(q, k, v, ck, cv, pos, cfg, pol,
                                            win)
@@ -431,12 +433,22 @@ def decode_step(params: Dict[str, Any], state: DecodeState,
 
 def prefill(params, batch, cfg: ArchConfig,
             pol: Optional[ExecutionPolicy] = None,
-            headroom: int = 64) -> Tuple[Array, DecodeState]:
+            headroom: int = 64,
+            lengths: Optional[Array] = None) -> Tuple[Array, DecodeState]:
     """Full-sequence forward that also populates the decode state.
 
     For attention families the per-layer K/V are written into a cache with
     ``headroom`` extra decode slots (prefill_32k lowers this path);
     recurrent families fold the sequence into their O(1) state.
+
+    ``lengths`` (B,) marks each row's true prompt length in a batch whose
+    prompts are **right-padded** to a common bucket (the serving engine's
+    shape buckets): causal attention already ignores the trailing pads for
+    the real positions, recurrent state updates are masked to no-ops on pad
+    steps, the returned logits are each row's *last real* position, and
+    ``state.pos`` comes back per-row — ready for
+    :func:`slot_update`/:func:`decode_step` with per-slot positions.
+    Outputs for the real tokens are bit-identical to the unpadded run.
     """
     pol = pol or cfg.exec_policy
     if cfg.input_kind == "tokens":
@@ -447,6 +459,8 @@ def prefill(params, batch, cfg: ArchConfig,
     positions = jnp.arange(s, dtype=jnp.int32)
     windows = jnp.asarray(layer_windows(cfg, s))
     state = init_decode_state(cfg, b, s + headroom)
+    mask = (None if lengths is None
+            else jnp.arange(s)[None, :] < lengths[:, None])
 
     def body(carry, xs):
         x = carry
@@ -457,12 +471,13 @@ def prefill(params, batch, cfg: ArchConfig,
             st = (jnp.zeros((b, cfg.d_model), h.dtype),
                   jnp.zeros((b, cfg.n_heads, dk, dk), jnp.float32))
             tm_out, (xp, wkv) = S.rwkv6_timemix(
-                h, S.Rwkv6Params(**bp["tm"]), cfg, pol, st)
+                h, S.Rwkv6Params(**bp["tm"]), cfg, pol, st,
+                mask=mask, lengths=lengths)
             x = x + tm_out
             h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
             cm_out, cp = S.rwkv6_channelmix(
                 h, S.Rwkv6ChannelParams(**bp["cm"]), cfg, pol,
-                jnp.zeros((b, cfg.d_model), h.dtype))
+                jnp.zeros((b, cfg.d_model), h.dtype), lengths=lengths)
             return x + cm_out, (xp, cp, wkv)
 
         bp, win = xs
@@ -475,7 +490,8 @@ def prefill(params, batch, cfg: ArchConfig,
             st = (jnp.zeros((b, cfg.ssm_conv - 1, cfg.d_model), h.dtype),
                   jnp.zeros((b, cfg.d_model, cfg.ssm_state), jnp.float32))
             ssm_out, (tail, hh) = S.mamba_mix(
-                h, S.MambaParams(**bp["mamba"]), cfg, pol, st)
+                h, S.MambaParams(**bp["mamba"]), cfg, pol, st,
+                mask=mask, lengths=lengths)
             attn_out = L.rms_norm(attn_out, bp["norm_attn"], cfg.norm_eps)
             ssm_out = L.rms_norm(ssm_out, bp["norm_ssm"], cfg.norm_eps)
             x = x + 0.5 * (attn_out + ssm_out)
@@ -509,20 +525,83 @@ def prefill(params, batch, cfg: ArchConfig,
                             (0, 0), (0, 0)))
         return constrain(t, ("layers", "batch", "seq", "kv_heads", None))
 
+    pos = (jnp.int32(s) if lengths is None else lengths.astype(jnp.int32))
     if cfg.family == "ssm":
         x, (xp, cp, wkv) = jax.lax.scan(body, x, params["blocks"])
-        state = state._replace(x_prev=xp, cm_prev=cp, wkv=wkv,
-                               pos=jnp.int32(s))
+        state = state._replace(x_prev=xp, cm_prev=cp, wkv=wkv, pos=pos)
     elif cfg.family == "hybrid":
         x, (ks, vs, tails, hs) = jax.lax.scan(body, x,
                                               (params["blocks"], windows))
         state = state._replace(cache_k=pad_cache(ks), cache_v=pad_cache(vs),
-                               conv_tail=tails, ssm_h=hs, pos=jnp.int32(s))
+                               conv_tail=tails, ssm_h=hs, pos=pos)
     else:
         x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], windows))
         state = state._replace(cache_k=pad_cache(ks), cache_v=pad_cache(vs),
-                               pos=jnp.int32(s))
+                               pos=pos)
 
-    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
-    logits = L.dense(x[:, -1:, :], params["lm_head"], pol)
+    if lengths is None:
+        x_last = x[:, -1:, :]
+    else:                       # each row's last *real* position
+        idx = (lengths - 1).astype(jnp.int32)[:, None, None]
+        x_last = jnp.take_along_axis(
+            x, jnp.broadcast_to(idx, (b, 1, x.shape[-1])), axis=1)
+    x_last = L.rms_norm(x_last, params["ln_f"], cfg.norm_eps)
+    logits = L.dense(x_last, params["lm_head"], pol)
     return logits, state
+
+
+# ---------------------------------------------------------------------------
+# Serving slots: per-slot state insertion (the continuous-batching seam)
+# ---------------------------------------------------------------------------
+
+def init_slot_state(cfg: ArchConfig, max_batch: int, max_seq: int,
+                    abstract: bool = False) -> DecodeState:
+    """Decode state for ``max_batch`` persistent serving slots.
+
+    Identical to :func:`init_decode_state` except ``pos`` is a ``(B,)``
+    vector — every slot tracks its own tokens-seen counter, so slots
+    prefilled at different times (and lengths) can decode in one batch.
+    """
+    st = init_decode_state(cfg, max_batch, max_seq, abstract)
+    pos = (jax.ShapeDtypeStruct((max_batch,), jnp.int32) if abstract
+           else jnp.zeros((max_batch,), jnp.int32))
+    return st._replace(pos=pos)
+
+
+def slot_update(state: DecodeState, sub: DecodeState, slots: Array
+                ) -> DecodeState:
+    """Scatter ``sub``'s per-request state into ``state`` at slot indices.
+
+    ``state`` is the engine's persistent slot state (``pos`` per-row, from
+    :func:`init_slot_state`); ``sub`` is a fresh prefill over a (possibly
+    smaller, bucket-padded) batch; ``slots`` (B_sub,) maps each ``sub`` row
+    to a target slot.  Out-of-range slot indices (>= max_batch) are
+    dropped — the engine pads admission groups with a sentinel so one
+    traced program covers every group size.  K/V caches shorter than the
+    slot cache (prompt buckets < max_seq) are zero-padded along the
+    sequence axis; every state family (attention KV, rwkv wkv/token-shift,
+    mamba conv/ssm) scatters along its batch axis (axis 1 under the
+    stacked layers axis).
+    """
+    slots = jnp.asarray(slots, jnp.int32)
+    out: Dict[str, Any] = {}
+    for name in DecodeState._fields:
+        tgt = getattr(state, name)
+        src = getattr(sub, name)
+        if tgt is None or src is None:
+            out[name] = tgt
+            continue
+        if name == "pos":
+            src = jnp.broadcast_to(src.astype(tgt.dtype), slots.shape)
+            out[name] = tgt.at[slots].set(src, mode="drop")
+            continue
+        if name in ("cache_k", "cache_v") and src.shape[2] != tgt.shape[2]:
+            grow = tgt.shape[2] - src.shape[2]
+            if grow < 0:
+                raise ValueError(
+                    f"prefill cache ({src.shape[2]}) exceeds slot cache "
+                    f"({tgt.shape[2]}); raise the engine's max_seq")
+            src = jnp.pad(src, [(0, 0), (0, 0), (0, grow)]
+                          + [(0, 0)] * (src.ndim - 3))
+        out[name] = tgt.at[:, slots].set(src.astype(tgt.dtype), mode="drop")
+    return DecodeState(**out)

@@ -1,13 +1,36 @@
-"""Serving runtime: continuous-batching engine over prefill/decode steps.
+"""Serving runtime: slot-based continuous batching over bucketed shapes.
 
-Production shape: a request queue, a batch scheduler that packs admitted
-requests into fixed decode slots (the jit'd decode_step has a static batch),
-per-slot completion tracking, and jit'd prefill/decode callables shared
-across requests.  This is the "serve a small model with batched requests"
-driver of deliverable (b).
+The paper's SYCore keeps one reconfigurable engine resident and streams
+heterogeneous workloads through it; the serving analogue is **continuous
+batching**: ``max_batch`` persistent decode slots, an admission queue with
+arrival times, retire-and-refill on *every* decode step (a finished short
+request frees its slot immediately — it never rides dead-weight until the
+slowest request in a gang finishes), and a scheduler that prefills newly
+admitted requests into free slots while occupied slots keep decoding.
+
+Shapes are **bucketed** so the jit'd callables — and the tuned-block table
+keyed on kernel call shapes — are reused across admissions instead of
+retracing per batch composition:
+
+  * prefill:  (B = max_batch, S = next-pow2 prompt bucket), prompts
+    right-padded, true lengths passed to ``model.prefill(lengths=...)``
+  * decode:   (B = max_batch, 1) every step, against the fixed-shape slot
+    state from ``model.init_slot_state`` (per-slot ``pos``)
+  * insert:   ``model.slot_update`` scatters a prefill's per-request state
+    (attention KV *and* rwkv/mamba recurrent state) into slot indices;
+    admission groups are padded with a sentinel slot that the scatter drops
+
+Per-request outputs are bit-identical to single-stream decoding: the
+model-level seam masks pad steps out of recurrent state updates and each
+slot decodes against its own positions (see ``tests/test_serving.py``).
+
+``GangServeEngine`` preserves the previous lockstep scheduler as the
+benchmark baseline (``benchmarks/serve_bench.py`` replays the same trace
+through both and reports the throughput/latency gap).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Dict, List, Optional
@@ -25,28 +48,299 @@ class Request:
     rid: int
     prompt: np.ndarray            # (S,) int32 tokens (or (S,D) frames)
     max_new_tokens: int = 16
+    arrival_s: float = 0.0        # arrival offset from serve() start
+    # per-request sampling params (engine greedy=True overrides all)
+    temperature: float = 0.0      # 0 => greedy
+    top_k: int = 0                # 0 => full distribution
+    seed: int = 0
     output: Optional[np.ndarray] = None
-    submitted_at: float = 0.0
+    submitted_at: float = 0.0     # absolute arrival time
+    admitted_at: float = 0.0      # absolute prefill time
     done_at: float = 0.0
 
 
+@dataclasses.dataclass
+class _Slot:
+    """Live decode-slot bookkeeping (host side)."""
+    req: Request
+    next_token: int               # last sampled token, fed next step
+    produced: int                 # tokens emitted so far (incl. prefill's)
+    tokens: List[int]
+    rng: Optional[np.random.Generator]
+
+
+def next_pow2(n: int) -> int:
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
 class ServeEngine:
+    """Continuous-batching serve engine (slot scheduler, bucketed shapes)."""
+
+    def __init__(self, model: Model, params, max_batch: int = 8,
+                 max_seq: int = 256, greedy: bool = True,
+                 min_bucket: int = 16):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.greedy = greedy
+        self.min_bucket = min_bucket
+        # Warm boot: pull the persistent tuned-block table (written by
+        # `python -m benchmarks.tune`) into the substrate before the first
+        # trace, so serving never re-derives — or worse, never measures —
+        # its kernel tiles.  Missing/stale tables load as empty.
+        self.tuned_blocks = kernel_common.load_tuned_table()
+        # Retrace telemetry: each counter bumps only when jax *traces* the
+        # wrapped python callable, so a steady-state engine shows
+        # len(buckets) prefill traces and exactly one decode trace
+        # (asserted by tests/test_serving.py::test_bucket_reuse_no_retrace).
+        self.trace_counts: collections.Counter = collections.Counter()
+
+        def _prefill_fn(p, inputs, lengths):
+            self.trace_counts["prefill"] += 1
+            return model.prefill(p, inputs, headroom=0, lengths=lengths)
+
+        def _decode_fn(p, st, inputs):
+            self.trace_counts["decode"] += 1
+            return model.decode_step(p, st, inputs)
+
+        def _insert_fn(st, sub, slots):
+            self.trace_counts["insert"] += 1
+            return model.slot_update(st, sub, slots)
+
+        self._prefill = jax.jit(_prefill_fn)
+        # the old slot state is dead the moment a step returns: donate it
+        # so XLA updates the caches in place (donation is a no-op warning
+        # on CPU, so only ask for it on accelerators)
+        donate = kernel_common.platform() != "cpu"
+        self._decode = jax.jit(_decode_fn,
+                               donate_argnums=(1,) if donate else ())
+        self._insert = jax.jit(_insert_fn,
+                               donate_argnums=(0,) if donate else ())
+        # slot state allocates lazily on the first serve(): construction
+        # stays cheap (warm boot = load the tuned table, nothing else)
+        self._state = None
+        self._slots: List[Optional[_Slot]] = [None] * max_batch
+        # prompt buckets are powers of two (the ssm/hybrid chunked scans
+        # also require pow2-friendly lengths), so the largest bucket is
+        # the largest power of two that fits the slot cache
+        self._bucket_cap = 1 << (max_seq.bit_length() - 1)
+        # scheduler telemetry for the most recent serve() call:
+        # ("admit"|"retire", rid, slot, decode_step); slot -1 marks a
+        # request retired straight from prefill (1-token budget)
+        self.events: List[tuple] = []
+        self.metrics: Dict[str, float] = {
+            "prefill_tokens": 0, "decode_tokens": 0, "decode_steps": 0,
+            "queue_wait_s": 0.0, "slot_occupancy": 0.0,
+        }
+        self._occ_num = 0
+        self._occ_den = 0
+        self._wait_sum = 0.0
+        self._n_done = 0
+
+    # -- scheduling ---------------------------------------------------------
+
+    def _bucket(self, n: int) -> int:
+        return min(max(self.min_bucket, next_pow2(n)), self._bucket_cap)
+
+    def _validate(self, requests: List[Request]) -> None:
+        for r in requests:
+            need = len(r.prompt) + r.max_new_tokens
+            if need > self.max_seq:
+                raise ValueError(
+                    f"request {r.rid}: prompt {len(r.prompt)} + "
+                    f"max_new {r.max_new_tokens} exceeds max_seq "
+                    f"{self.max_seq}; requests are never silently dropped")
+            if len(r.prompt) > self._bucket_cap:
+                raise ValueError(
+                    f"request {r.rid}: prompt {len(r.prompt)} exceeds the "
+                    f"largest prompt bucket ({self._bucket_cap}) for "
+                    f"max_seq {self.max_seq}")
+            if r.max_new_tokens < 1:
+                raise ValueError(f"request {r.rid}: max_new_tokens < 1")
+            if len(r.prompt) < 1:
+                raise ValueError(f"request {r.rid}: empty prompt")
+
+    def _pull_logits(self, logits, sampling: bool):
+        """Host-side view of a step's logits: greedy needs only B ints
+        (device argmax); only steps where some live request actually
+        samples pull the full (B, vocab) float rows."""
+        b = self.max_batch
+        if self.greedy or not sampling:
+            return np.asarray(jnp.argmax(logits.reshape(b, -1),
+                                         axis=-1)), None
+        return None, np.asarray(logits.astype(jnp.float32)).reshape(b, -1)
+
+    def _next_token(self, slot: _Slot, i: int, ids, rows) -> int:
+        return (int(ids[i]) if rows is None
+                else self._select_token(slot, rows[i]))
+
+    def _select_token(self, slot: _Slot, row: np.ndarray) -> int:
+        r = slot.req
+        if self.greedy or r.temperature <= 0.0:
+            return int(np.argmax(row))
+        z = row.astype(np.float64) / max(r.temperature, 1e-6)
+        k = min(int(r.top_k), z.size)   # top_k >= vocab == no filter
+        if 0 < k < z.size:
+            kth = np.partition(z, -k)[-k]
+            z = np.where(z >= kth, z, -np.inf)
+        z -= z.max()
+        p = np.exp(z)
+        p /= p.sum()
+        return int(slot.rng.choice(len(p), p=p))
+
+    def _retire(self, i: Optional[int], slot: _Slot, done: List[Request]
+                ) -> None:
+        r = slot.req
+        r.output = np.asarray(slot.tokens[:r.max_new_tokens])
+        r.done_at = time.monotonic()
+        done.append(r)
+        self._n_done += 1
+        self.events.append(("retire", r.rid, -1 if i is None else i,
+                            int(self.metrics["decode_steps"])))
+        if i is not None:
+            self._slots[i] = None
+
+    def _admit(self, group: List[Request], free: List[int],
+               done: List[Request]) -> None:
+        """Prefill a bucket-padded admission group into free slots."""
+        cfg = self.model.cfg
+        b = self.max_batch
+        bucket = self._bucket(max(len(r.prompt) for r in group))
+        if cfg.input_kind == "tokens":
+            arr = np.zeros((b, bucket), np.int32)
+        else:
+            arr = np.zeros((b, bucket, cfg.d_model), np.float32)
+        lengths = np.ones((b,), np.int32)       # dummy rows: length 1
+        slots = np.full((b,), b, np.int32)      # sentinel: scatter drops
+        for j, r in enumerate(group):
+            arr[j, :len(r.prompt)] = r.prompt
+            lengths[j] = len(r.prompt)
+            slots[j] = free[j]
+        key = "tokens" if cfg.input_kind == "tokens" else "frames"
+        logits, sub = self._prefill(self.params, {key: jnp.asarray(arr)},
+                                    jnp.asarray(lengths))
+        self._state = self._insert(self._state, sub, jnp.asarray(slots))
+        ids, rows = self._pull_logits(
+            logits, any(r.temperature > 0.0 for r in group))
+        now = time.monotonic()
+        for j, r in enumerate(group):
+            r.admitted_at = now
+            self._wait_sum += max(0.0, now - r.submitted_at)
+            self.metrics["prefill_tokens"] += len(r.prompt)
+            self.events.append(("admit", r.rid, free[j],
+                                int(self.metrics["decode_steps"])))
+            rng = (np.random.default_rng([r.seed, r.rid])
+                   if not self.greedy and r.temperature > 0.0 else None)
+            slot = _Slot(req=r, next_token=0, produced=0, tokens=[], rng=rng)
+            slot.next_token = self._next_token(slot, j, ids, rows)
+            slot.tokens.append(slot.next_token)
+            slot.produced = 1
+            if slot.produced >= r.max_new_tokens:
+                self._retire(None, slot, done)     # 1-token request
+            else:
+                self._slots[free[j]] = slot
+
+    # -- the loop -----------------------------------------------------------
+
+    def serve(self, requests: List[Request]) -> List[Request]:
+        """Run the trace to completion; returns requests in finish order.
+
+        Requests become visible to the scheduler at ``arrival_s`` seconds
+        after the call (0 = immediately); every request is served —
+        over-budget requests raise instead of being dropped.
+        """
+        self._validate(requests)
+        cfg = self.model.cfg
+        b = self.max_batch
+        if self._state is None:
+            self._state = self.model.init_slot_state(b, self.max_seq)
+        # events and the averaged metrics (queue_wait_s, slot_occupancy)
+        # describe this call's trace; the token/step counters accumulate
+        # over the engine lifetime.
+        self.events = []
+        self._occ_num = self._occ_den = 0
+        self._wait_sum = 0.0
+        self._n_done = 0
+        t0 = time.monotonic()
+        for r in requests:
+            r.submitted_at = t0 + r.arrival_s
+        queue = collections.deque(
+            sorted(requests, key=lambda r: (r.arrival_s, r.rid)))
+        done: List[Request] = []
+
+        while queue or any(s is not None for s in self._slots):
+            # admission: refill free slots with every arrived request
+            now_rel = time.monotonic() - t0
+            free = [i for i, s in enumerate(self._slots) if s is None]
+            group: List[Request] = []
+            while (queue and len(group) < len(free)
+                   and queue[0].arrival_s <= now_rel):
+                group.append(queue.popleft())
+            if group:
+                self._admit(group, free, done)
+
+            active = [i for i, s in enumerate(self._slots) if s is not None]
+            if not active:
+                if queue:       # idle: wait for the next arrival
+                    time.sleep(min(
+                        0.005,
+                        max(0.0, queue[0].arrival_s
+                            - (time.monotonic() - t0))))
+                continue
+
+            # one decode step for every slot (occupied or not: fixed B)
+            tokens = np.zeros((b, 1), np.int32)
+            for i in active:
+                tokens[i, 0] = self._slots[i].next_token
+            if cfg.input_kind == "tokens":
+                nb = {"tokens": jnp.asarray(tokens)}
+            else:               # frame stubs decode over embedded tokens
+                nb = {"frames": jnp.zeros((b, 1, cfg.d_model), jnp.float32)}
+            logits, self._state = self._decode(self.params, self._state, nb)
+            ids, rows = self._pull_logits(
+                logits, any(self._slots[i].rng is not None for i in active))
+            self.metrics["decode_steps"] += 1
+            self.metrics["decode_tokens"] += len(active)
+            self._occ_num += len(active)
+            self._occ_den += b
+
+            # retire-and-refill: a finished slot frees this very step
+            for i in active:
+                slot = self._slots[i]
+                slot.next_token = self._next_token(slot, i, ids, rows)
+                slot.tokens.append(slot.next_token)
+                slot.produced += 1
+                if slot.produced >= slot.req.max_new_tokens:
+                    self._retire(i, slot, done)
+
+        self.metrics["queue_wait_s"] = self._wait_sum / max(self._n_done, 1)
+        self.metrics["slot_occupancy"] = self._occ_num / max(self._occ_den, 1)
+        return done
+
+
+class GangServeEngine:
+    """The pre-continuous-batching scheduler, kept as the benchmark
+    baseline: packs up to ``max_batch`` requests, prefills them together
+    (left-padded to the longest prompt — a fresh trace per composition),
+    decodes the gang in lockstep until the *slowest* request finishes, and
+    only then admits more.  ``benchmarks/serve_bench.py`` replays the same
+    trace through this and :class:`ServeEngine` to measure the gap."""
+
     def __init__(self, model: Model, params, max_batch: int = 8,
                  max_seq: int = 256, greedy: bool = True):
         self.model = model
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
-        # Warm boot: pull the persistent tuned-block table (written by
-        # `python -m benchmarks.tune`) into the substrate before the first
-        # trace, so serving never re-derives — or worse, never measures —
-        # its kernel tiles.  Missing/stale tables load as empty.
         self.tuned_blocks = kernel_common.load_tuned_table()
-        cfg = model.cfg
         self._prefill = jax.jit(
-            lambda p, b: model.prefill(p, b))
+            lambda p, batch: model.prefill(p, batch))
         self._decode = jax.jit(
-            lambda p, st, b: model.decode_step(p, st, b))
+            lambda p, st, batch: model.decode_step(p, st, batch))
         self.metrics: Dict[str, float] = {"prefill_tokens": 0,
                                           "decode_tokens": 0}
 
@@ -66,16 +360,24 @@ class ServeEngine:
         return {"frames": jnp.asarray(frames)}
 
     def serve(self, requests: List[Request]) -> List[Request]:
-        """Continuous batching: admit up to max_batch, prefill together,
-        decode in lockstep, retire finished slots and refill."""
-        pending = list(requests)
+        """Gang scheduling: admit up to max_batch, prefill together,
+        decode in lockstep, admit the next gang when all finish."""
+        pending = sorted(requests, key=lambda r: (r.arrival_s, r.rid))
+        t0 = time.monotonic()
         for r in pending:
-            r.submitted_at = time.time()
+            r.submitted_at = t0 + r.arrival_s
         done: List[Request] = []
 
         while pending:
             batch = pending[:self.max_batch]
             pending = pending[self.max_batch:]
+            # gang admission waits until every member of the batch has
+            # arrived (it cannot start a partial gang and refill later) —
+            # keeps latencies non-negative and wall clocks comparable with
+            # the continuous engine replaying the same arrival trace.
+            wait = t0 + max(r.arrival_s for r in batch) - time.monotonic()
+            if wait > 0:
+                time.sleep(wait)
             inputs = self._pad_prompts(batch)
             logits, state = self._prefill(self.params, inputs)
             self.metrics["prefill_tokens"] += sum(len(r.prompt)
@@ -99,6 +401,6 @@ class ServeEngine:
                 self.metrics["decode_tokens"] += b
             for i, r in enumerate(batch):
                 r.output = np.asarray(outs[i][:r.max_new_tokens])
-                r.done_at = time.time()
+                r.done_at = time.monotonic()
                 done.append(r)
         return done
