@@ -18,6 +18,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * serve_*     - continuous batching vs gang scheduling on an arrival
                   trace (smoke); writes ``BENCH_serving.json``.  Full
                   replay: ``python -m benchmarks.serve_bench``.
+  * spec_*      - speculative decoding vs plain decode on the draftable
+                  motif trace (smoke); writes ``BENCH_spec.json`` and
+                  fails on greedy divergence.  Full replay:
+                  ``python -m benchmarks.serve_bench --spec``.
 """
 from __future__ import annotations
 
@@ -27,7 +31,7 @@ import traceback
 
 
 SUITE_NAMES = ("pareto", "mac", "caesar", "accuracy", "roofline", "tune",
-               "grads", "serve")
+               "grads", "serve", "spec")
 
 
 def main(argv=None):
@@ -49,6 +53,7 @@ def main(argv=None):
         "tune": tune_bench.run,
         "grads": grad_bench.run,
         "serve": serve_bench.run,
+        "spec": serve_bench.run_spec,
     }
     only = args.only or args.suite
     if only:

@@ -20,7 +20,20 @@ completion, slot occupancy, and the continuous/gang speedup.  The CI
 dropped, and throughput must stay within 2x of
 ``benchmarks/serving_baseline.json``.
 
-Also registered as the ``serve`` suite of ``benchmarks/run.py``.
+**Speculative decoding** (``--spec`` / the ``spec`` suite): replays a
+*draftable* trace — prompts built from short repeated motifs, the
+list/code/template-shaped workload prompt-lookup drafting is designed
+for — through a plain continuous engine and a ``spec_k`` speculative one
+(same requests, greedy), asserts the outputs are **bit-identical**, and
+writes ``BENCH_spec.json`` with both throughputs, the spec/plain speedup,
+the draft-acceptance rate and tokens/step.  Both engines are warmed on a
+small side trace first so the comparison is steady-state decode, not
+compile time.  The CI ``serve-smoke`` lane gates on this file: greedy
+outputs must match and acceptance must not fall below the committed
+``benchmarks/spec_baseline.json`` floor.
+
+Also registered as the ``serve`` and ``spec`` suites of
+``benchmarks/run.py``.
 """
 from __future__ import annotations
 
@@ -58,6 +71,33 @@ def make_trace(cfg, n_requests: int, seed: int = 0, rate_hz: float = 50.0,
     return reqs
 
 
+def make_spec_trace(cfg, n_requests: int, seed: int = 0,
+                    rate_hz: float = 200.0, len_range=(16, 48),
+                    motif_range=(2, 5), max_new_choices=(32, 48, 64)
+                    ) -> List[Request]:
+    """Draftable arrival trace: motif-structured prompts, long outputs.
+
+    Prompts tile a short random motif — the repetitive list/code/template
+    shape that prompt-lookup speculative decoding targets (on such inputs
+    greedy continuations fall into drafter-predictable cycles; fully
+    random prompts are the adversarial case and verify-bound spec decode
+    rightly loses there).  Outputs are decode-heavy so steady-state decode
+    dominates the replay.
+    """
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    reqs = []
+    for i in range(n_requests):
+        t += float(rng.exponential(1.0 / rate_hz))
+        n = int(rng.integers(*len_range))
+        m = int(rng.integers(*motif_range))
+        motif = rng.integers(0, cfg.vocab_size, m)
+        prompt = np.tile(motif, n // m + 1)[:n].astype(np.int32)
+        reqs.append(Request(i, prompt, arrival_s=t,
+                            max_new_tokens=int(rng.choice(max_new_choices))))
+    return reqs
+
+
 def _replay(engine, requests: List[Request]) -> Dict[str, Any]:
     t0 = time.perf_counter()
     done = engine.serve(requests)
@@ -84,6 +124,11 @@ def _replay(engine, requests: List[Request]) -> Dict[str, Any]:
         stats["slot_occupancy"] = round(m["slot_occupancy"], 3)
         stats["queue_wait_s"] = round(m["queue_wait_s"], 3)
         stats["decode_steps"] = int(m["decode_steps"])
+        stats["tokens_per_step"] = round(m["tokens_per_step"], 3)
+    if m.get("spec_steps"):
+        stats["spec_acceptance"] = round(m["spec_acceptance"], 3)
+        stats["draft_tokens"] = int(m["draft_tokens"])
+        stats["draft_accepted"] = int(m["draft_accepted"])
     return stats
 
 
@@ -129,6 +174,82 @@ def sweep(smoke: bool = False, out_path: Optional[str] = None,
     return report
 
 
+def sweep_spec(smoke: bool = False, out_path: Optional[str] = None,
+               arch: str = "glm4-9b", spec_k: int = 5,
+               n_requests: Optional[int] = None, max_batch: int = 4,
+               max_seq: int = 128, seed: int = 0,
+               reps: int = 2) -> Dict[str, Any]:
+    """Spec-vs-plain comparison on the draftable trace (see module doc).
+
+    Each engine replays the measured trace ``reps`` times (interleaved
+    plain/spec) and the fastest replay is reported — shared CI runners
+    and cpu-share-capped containers see invisible neighbour load, and
+    best-of-N is the standard way to read a throughput *capability*
+    through that noise.  Token/acceptance counters are reset before every
+    measured replay, so the reported stats describe exactly the replay
+    they came from.
+    """
+    cfg = get_arch(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    # long enough that steady-state decode dominates the slot ramp-up and
+    # drain tails (a short trace under-reports both engines, the spec one
+    # more: its fixed-shape verify pays full width for a draining batch)
+    n = n_requests if n_requests is not None else (48 if smoke else 96)
+
+    def build(k):
+        eng = ServeEngine(model, params, max_batch=max_batch,
+                          max_seq=max_seq, spec_k=k)
+        # steady-state comparison: compiles and the tuned-table boot are
+        # paid on a small side trace, then the measured trace replays
+        # against warm programs (the plain-vs-gang bench measures the
+        # compile story; here the question is decode throughput)
+        eng.serve(make_spec_trace(cfg, 6, seed=seed + 1))
+        return eng
+
+    def replay(eng):
+        # the engine's token/step/draft counters accumulate over its
+        # lifetime: zero them so the reported (and CI-gated) stats
+        # describe the measured trace only, not warmup + measured
+        for key in ("prefill_tokens", "decode_tokens", "decode_steps",
+                    "spec_steps", "draft_tokens", "draft_accepted"):
+            eng.metrics[key] = 0
+        reqs = make_spec_trace(cfg, n, seed=seed)
+        return _replay(eng, reqs), reqs
+
+    engines = {0: build(0), spec_k: build(spec_k)}
+    best: Dict[int, Any] = {}
+    for _ in range(max(1, reps)):
+        for k, eng in engines.items():          # interleave plain/spec
+            stats, reqs = replay(eng)
+            if k not in best or stats["tok_s"] > best[k][0]["tok_s"]:
+                best[k] = (stats, reqs)
+    plain_stats, plain_reqs = best[0]
+    spec_stats, spec_reqs = best[spec_k]
+    # greedy spec decode must be a pure scheduling change: every request's
+    # tokens bit-identical to the plain engine's
+    by_rid = {r.rid: r for r in plain_reqs}
+    greedy_match = all(
+        np.array_equal(r.output, by_rid[r.rid].output) for r in spec_reqs)
+
+    report = {
+        "meta": {**tuning.version_stamp(), "smoke": smoke, "arch": arch,
+                 "max_batch": max_batch, "max_seq": max_seq,
+                 "n_requests": n, "seed": seed, "spec_k": spec_k,
+                 "drafter": "ngram", "trace": "motif-prompt draftable"},
+        "plain": plain_stats,
+        "spec": spec_stats,
+        "speedup_tok_s": round(
+            spec_stats["tok_s"] / max(plain_stats["tok_s"], 1e-9), 3),
+        "spec_acceptance": spec_stats.get("spec_acceptance", 0.0),
+        "greedy_match": bool(greedy_match),
+    }
+    if out_path:
+        with open(out_path, "w", encoding="utf-8") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+    return report
+
+
 def run(csv_rows):
     """`benchmarks.run` suite entry: smoke trace, writes BENCH_serving.json."""
     report = sweep(smoke=True, out_path="BENCH_serving.json")
@@ -145,6 +266,26 @@ def run(csv_rows):
         f"occupancy={report['continuous'].get('slot_occupancy', 0)}"))
 
 
+def run_spec(csv_rows):
+    """`benchmarks.run` spec suite: smoke trace, writes BENCH_spec.json."""
+    report = sweep_spec(smoke=True, out_path="BENCH_spec.json")
+    for name in ("plain", "spec"):
+        s = report[name]
+        us = 1e6 * s["wall_s"] / max(s["delivered_tokens"], 1)
+        csv_rows.append((
+            f"spec_{name}_{report['meta']['arch']}", us,
+            f"tok_s={s['tok_s']};steps={s['decode_steps']};"
+            f"tokens_per_step={s.get('tokens_per_step', 1)}"))
+    csv_rows.append((
+        "spec_speedup", 0.0,
+        f"spec_over_plain={report['speedup_tok_s']};"
+        f"acceptance={report['spec_acceptance']};"
+        f"greedy_match={report['greedy_match']}"))
+    if not report["greedy_match"]:
+        raise AssertionError(
+            "speculative greedy outputs diverged from plain decode")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="Continuous-batching vs gang-scheduler serving "
@@ -154,12 +295,43 @@ def main(argv=None) -> int:
     ap.add_argument("--arch", default="glm4-9b")
     ap.add_argument("--requests", type=int, default=None)
     ap.add_argument("--max-batch", type=int, default=4)
-    ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--max-seq", type=int, default=64,
+                    help="slot cache length (--spec raises this to at "
+                         "least 128: its trace carries longer outputs)")
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--out", default="BENCH_serving.json",
-                    help="report path ('' to skip)")
+    ap.add_argument("--spec", action="store_true",
+                    help="speculative-vs-plain comparison on the "
+                         "draftable trace (writes BENCH_spec.json)")
+    ap.add_argument("--spec-k", type=int, default=5,
+                    help="drafted tokens per slot per step (--spec)")
+    ap.add_argument("--out", default=None,
+                    help="report path ('' to skip); defaults to "
+                         "BENCH_serving.json / BENCH_spec.json")
     args = ap.parse_args(argv)
-    report = sweep(smoke=args.smoke, out_path=args.out or None,
+    out = args.out
+    if out is None:
+        out = "BENCH_spec.json" if args.spec else "BENCH_serving.json"
+
+    if args.spec:
+        report = sweep_spec(smoke=args.smoke, out_path=out or None,
+                            arch=args.arch, spec_k=args.spec_k,
+                            n_requests=args.requests,
+                            max_batch=args.max_batch,
+                            max_seq=max(args.max_seq, 128),
+                            seed=args.seed)
+        print("engine,tok_s,steps,tokens_per_step,dropped")
+        for name in ("plain", "spec"):
+            s = report[name]
+            print(f"{name},{s['tok_s']},{s['decode_steps']},"
+                  f"{s.get('tokens_per_step', '')},{s['dropped']}")
+        print(f"# speedup (spec/plain): {report['speedup_tok_s']}x; "
+              f"acceptance {report['spec_acceptance']}; "
+              f"greedy_match {report['greedy_match']}")
+        ok = (report["greedy_match"] and report["plain"]["dropped"] == 0
+              and report["spec"]["dropped"] == 0)
+        return 0 if ok else 1
+
+    report = sweep(smoke=args.smoke, out_path=out or None,
                    arch=args.arch, n_requests=args.requests,
                    max_batch=args.max_batch, max_seq=args.max_seq,
                    seed=args.seed)

@@ -22,7 +22,7 @@ sys.path.insert(0, str(_ROOT))  # benchmarks package (shared make_trace)
 import jax
 import numpy as np
 
-from benchmarks.serve_bench import make_trace
+from benchmarks.serve_bench import make_spec_trace, make_trace
 from repro.configs import get_arch
 from repro.models.model_zoo import build_model
 from repro.runtime.serve_loop import GangServeEngine, ServeEngine
@@ -36,15 +36,29 @@ def main():
     ap.add_argument("--max-seq", type=int, default=64)
     ap.add_argument("--gang", action="store_true",
                     help="use the old lockstep scheduler instead")
+    ap.add_argument("--spec", type=int, default=0, metavar="K",
+                    help="speculative decoding: draft K tokens per slot "
+                         "per step (n-gram drafter)")
     args = ap.parse_args()
+    if args.spec and args.gang:
+        ap.error("--spec needs the continuous engine (drop --gang)")
 
     cfg = get_arch(args.arch).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    cls = GangServeEngine if args.gang else ServeEngine
-    engine = cls(model, params, max_batch=args.max_batch,
-                 max_seq=args.max_seq)
-    reqs = make_trace(cfg, args.requests)
+    # the draftable spec trace carries longer outputs than the default
+    # mixed trace: give its requests room
+    max_seq = max(args.max_seq, 128) if args.spec else args.max_seq
+    if args.gang:
+        engine = GangServeEngine(model, params, max_batch=args.max_batch,
+                                 max_seq=max_seq)
+    else:
+        engine = ServeEngine(model, params, max_batch=args.max_batch,
+                             max_seq=max_seq, spec_k=args.spec)
+    # spec mode replays the draftable motif trace — the workload where
+    # prompt-lookup drafting earns its verify width
+    reqs = (make_spec_trace(cfg, args.requests) if args.spec
+            else make_trace(cfg, args.requests))
     t0 = time.time()
     done = engine.serve(reqs)
     dt = time.time() - t0
@@ -62,6 +76,9 @@ def main():
               f"slot occupancy {engine.metrics['slot_occupancy']:.0%}, "
               f"{engine.trace_counts['prefill']} prefill trace(s) over "
               f"{engine.metrics['decode_steps']} decode steps")
+    if args.spec:
+        print(f"  spec: acceptance {engine.metrics['spec_acceptance']:.0%},"
+              f" {engine.metrics['tokens_per_step']:.2f} tokens/step")
 
 
 if __name__ == "__main__":

@@ -27,16 +27,25 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--gang", action="store_true",
                     help="use the old lockstep scheduler")
+    ap.add_argument("--spec", type=int, default=0, metavar="K",
+                    help="speculative decoding: draft K tokens per slot "
+                         "per step (n-gram drafter; greedy outputs stay "
+                         "bit-identical to plain decode)")
     args = ap.parse_args(argv)
+    if args.spec and args.gang:
+        ap.error("--spec needs the continuous engine (drop --gang)")
 
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
-    cls = GangServeEngine if args.gang else ServeEngine
-    engine = cls(model, params, max_batch=args.max_batch,
-                 max_seq=args.max_seq)
+    if args.gang:
+        engine = GangServeEngine(model, params, max_batch=args.max_batch,
+                                 max_seq=args.max_seq)
+    else:
+        engine = ServeEngine(model, params, max_batch=args.max_batch,
+                             max_seq=args.max_seq, spec_k=args.spec)
     rng = np.random.default_rng(args.seed)
     reqs = []
     for i in range(args.requests):
@@ -60,6 +69,11 @@ def main(argv=None):
     if not args.gang:
         print(f"# queue wait {engine.metrics['queue_wait_s'] * 1e3:.0f}ms, "
               f"slot occupancy {engine.metrics['slot_occupancy']:.0%}")
+    if args.spec:
+        print(f"# spec: acceptance "
+              f"{engine.metrics['spec_acceptance']:.0%}, "
+              f"{engine.metrics['tokens_per_step']:.2f} tokens/step over "
+              f"{engine.metrics['decode_steps']:.0f} steps")
     return 0
 
 

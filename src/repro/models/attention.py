@@ -216,3 +216,64 @@ def decode_attention(q: Array, k_new: Array, v_new: Array, cache_k: Array,
     probs = L.softmax(scores, pol).astype(q.dtype)
     ctx = jnp.einsum("bkgst,btkd->bskgd", probs, dequantize_kv(cache_v, q.dtype))
     return ctx.reshape(b, 1, hq, dh), cache_k, cache_v
+
+
+def verify_attention(q: Array, k_new: Array, v_new: Array, cache_k: Array,
+                     cache_v: Array, pos: Array, cfg: ArchConfig,
+                     pol: ExecutionPolicy, window
+                     ) -> Tuple[Array, Array, Array]:
+    """Speculative verify: K candidate positions scored in one pass.
+
+    q/k_new/v_new: (B,K,H*,dh) — row b's candidates sit at absolute
+    positions ``pos[b] .. pos[b]+K-1``.  All K K/V columns are written
+    first (the cache is treated as **linear**: writes past the cache end
+    are dropped, never ring-wrapped — a wrapped draft write would clobber
+    still-valid history with a token the host may reject), then every
+    query is masked to its own committed history plus the *earlier*
+    candidates of this call:
+
+      * the age mask is the decode mask per candidate position,
+      * candidate columns ``j > i`` (this call's future writes) are
+        explicitly invisible to query ``i`` even when the age mask
+        saturates at a full cache — only columns that actually landed
+        count, so a dropped overflow write never shadows the old entry
+        that still lives at its wrapped index.
+
+    Per-query numerics are the plain :func:`decode_attention` ops at the
+    same position, which is what keeps greedy spec decoding bit-identical
+    to single-token decode.  Returns (ctx (B,K,Hq,dh), cache_k, cache_v).
+    """
+    b, kq, hq, dh = q.shape
+    s_max = cache_k.shape[1]
+    posv = pos if jnp.ndim(pos) == 1 else jnp.broadcast_to(pos, (b,))
+    offs = jnp.arange(kq, dtype=posv.dtype)
+    wpos = posv[:, None] + offs[None, :]                  # (B,K) absolute
+    quant = cache_k.dtype == jnp.int8
+    k_w = quantize_kv(k_new) if quant else k_new.astype(cache_k.dtype)
+    v_w = quantize_kv(v_new) if quant else v_new.astype(cache_v.dtype)
+    rows = jnp.arange(b)[:, None]
+    # linear-cache write: out-of-range columns drop (never wrap)
+    cache_k = cache_k.at[rows, wpos].set(k_w, mode="drop")
+    cache_v = cache_v.at[rows, wpos].set(v_w, mode="drop")
+    hkv = cache_k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, kq, hkv, g, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg,
+                        dequantize_kv(cache_k, q.dtype)) / jnp.sqrt(float(dh))
+    t = jnp.arange(s_max)
+    age = jnp.mod(wpos[..., None] - t, s_max)             # (B,K,S); 0=self
+    valid = age < jnp.minimum(wpos[..., None] + 1, s_max)
+    in_window = age < window
+    # this call's candidate columns: slot t holds candidate j = d when
+    # d < K *and* that write landed (pos + d < s_max); query i must not
+    # see j > i
+    d = jnp.mod(t[None, None, :] - posv[:, None, None], s_max)
+    future = ((d > offs[None, :, None]) & (d < kq)
+              & (posv[:, None, None] + d < s_max))
+    mask = valid & in_window & ~future
+    mask = mask[:, None, None]                            # (B,1,1,K,S)
+    scores = jnp.where(mask, scores.astype(jnp.float32), NEG_INF)
+    probs = L.softmax(scores, pol).astype(q.dtype)
+    ctx = jnp.einsum("bkgst,btkd->bskgd", probs,
+                     dequantize_kv(cache_v, q.dtype))
+    return ctx.reshape(b, kq, hq, dh), cache_k, cache_v

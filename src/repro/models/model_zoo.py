@@ -63,6 +63,30 @@ class Model:
                           abstract: bool = False):
         return T.init_decode_state(self.cfg, batch, max_seq, abstract)
 
+    # -- speculative decode --------------------------------------------------
+    def verify_step(self, params, state, batch,
+                    pol: Optional[ExecutionPolicy] = None):
+        """Score k+1 drafted positions per row in one call.
+
+        Returns ``(logits (B,K,V), state, rec_stack)``; commit the host's
+        per-row accepted lengths with :meth:`spec_commit`.  The scan body
+        is the exact single-token decode computation, so greedy outputs
+        are bit-identical to plain :meth:`decode_step` chains.
+        """
+        return T.verify_step(params, state, batch, self.cfg, pol)
+
+    def spec_commit(self, state, rec_stack, advance):
+        """Advance per-row ``pos`` by the accepted length (0..k+1) and roll
+        recurrent state back to the matching verify checkpoint."""
+        return T.spec_commit(state, rec_stack, advance)
+
+    def verify_commit_greedy(self, params, state, batch, caps,
+                             pol: Optional[ExecutionPolicy] = None):
+        """Fused greedy spec step: verify + longest-prefix accept + commit
+        in one program; returns ``(ids, advance, state)``."""
+        return T.verify_commit_greedy(params, state, batch, caps, self.cfg,
+                                      pol)
+
     # -- serving slots (continuous batching) --------------------------------
     def init_slot_state(self, max_batch: int, max_seq: int,
                         abstract: bool = False):

@@ -60,8 +60,8 @@ def _last_valid(x: Array, lengths) -> Array:
 
 def rwkv6_timemix(x: Array, p: Rwkv6Params, cfg: ArchConfig,
                   pol: ExecutionPolicy, state: Tuple[Array, Array],
-                  mask: Array = None, lengths: Array = None
-                  ) -> Tuple[Array, Tuple[Array, Array]]:
+                  mask: Array = None, lengths: Array = None,
+                  return_states: bool = False):
     """x: (B, T, D).  state = (x_boundary (B, D), S (B, H, dk, dv)).
 
     Returns (out (B,T,D), new state).  wkv recurrence per head:
@@ -71,6 +71,11 @@ def rwkv6_timemix(x: Array, p: Rwkv6Params, cfg: ArchConfig,
     carry S through unchanged (decay forced to 1, k to 0), so the carried
     state is bit-identical to running the unpadded sequence; ``lengths``
     picks each row's last real token for the token-shift boundary.
+
+    ``return_states`` appends a third result: the wkv state *after every
+    step*, (B, T, H, dk, dv) float32 — the per-position checkpoints a
+    speculative ``verify_step`` rolls back to when drafts are rejected.
+    Only sensible for short T (the verify window).
     """
     b, t, d = x.shape
     h = cfg.n_heads
@@ -95,6 +100,18 @@ def rwkv6_timemix(x: Array, p: Rwkv6Params, cfg: ArchConfig,
         w = jnp.where(m, w, jnp.ones((), w.dtype))
         k = jnp.where(m, k, jnp.zeros((), k.dtype))
 
+    if t == 1:
+        # decode/verify fast path: one recurrence step, no chunk
+        # scaffolding (same primitive ops and casts as the scanned step
+        # below — bit-identical, just without the length-1 scans)
+        r1, k1, v1, w1 = (a[:, 0].astype(jnp.float32) for a in (r, k, v, w))
+        S = s0.astype(jnp.float32)
+        kv = k1[..., :, None] * v1[..., None, :]               # (B,H,dk,dv)
+        out = jnp.einsum("bhk,bhkv->bhv", r1, S + u[..., None] * kv)[:, None]
+        S = w1[..., None] * S + kv
+        res = _timemix_out(out, x, g, p, pol, lengths, S)
+        return res + (S[:, None],) if return_states else res
+
     chunk = max(1, min(64, t))
     assert t % chunk == 0
     n_chunks = t // chunk
@@ -107,20 +124,33 @@ def rwkv6_timemix(x: Array, p: Rwkv6Params, cfg: ArchConfig,
             kv = k_t[..., :, None] * v_t[..., None, :]          # (B,H,dk,dv)
             out_t = jnp.einsum("bhk,bhkv->bhv", r_t, S + u[..., None] * kv)
             S = w_t[..., None] * S + kv
-            return S, out_t
+            ys = (S, out_t) if return_states else out_t
+            return S, ys
 
-        S, out_c = jax.lax.scan(step, S, (r_c, k_c, v_c, w_c))
-        return S, out_c
+        S, ys_c = jax.lax.scan(step, S, (r_c, k_c, v_c, w_c))
+        return S, ys_c
 
     def to_chunks(a):  # (B,T,H,dk) -> (n_chunks, chunk, B, H, dk)
         return a.transpose(1, 0, 2, 3).reshape(n_chunks, chunk, b, h, dk)
 
-    S, out = jax.lax.scan(scan_chunk, s0.astype(jnp.float32),
-                          (to_chunks(r), to_chunks(k), to_chunks(v),
-                           to_chunks(w)))
+    S, ys = jax.lax.scan(scan_chunk, s0.astype(jnp.float32),
+                         (to_chunks(r), to_chunks(k), to_chunks(v),
+                          to_chunks(w)))
+    s_steps, out = ys if return_states else (None, ys)
     out = out.reshape(t, b, h, dk).transpose(1, 0, 2, 3)        # (B,T,H,dk)
+    res = _timemix_out(out, x, g, p, pol, lengths, S)
+    if return_states:  # (n_chunks, chunk, B, ...) -> (B, T, ...)
+        s_steps = jnp.moveaxis(s_steps.reshape((t,) + s_steps.shape[2:]),
+                               0, 1)
+        return res + (s_steps,)
+    return res
 
-    # per-head group norm then gate
+
+def _timemix_out(out: Array, x: Array, g: Array, p: Rwkv6Params,
+                 pol: ExecutionPolicy, lengths, S: Array
+                 ) -> Tuple[Array, Tuple[Array, Array]]:
+    """Shared timemix epilogue: per-head group norm, gate, out proj."""
+    b, t, d = x.shape
     mean = out.mean(-1, keepdims=True)
     var = out.var(-1, keepdims=True)
     out = (out - mean) * jax.lax.rsqrt(var + 64e-5)
@@ -166,13 +196,17 @@ class MambaParams(NamedTuple):
 
 def mamba_mix(x: Array, p: MambaParams, cfg: ArchConfig,
               pol: ExecutionPolicy, state: Tuple[Array, Array],
-              mask: Array = None, lengths: Array = None
-              ) -> Tuple[Array, Tuple[Array, Array]]:
+              mask: Array = None, lengths: Array = None,
+              return_states: bool = False):
     """x: (B,T,D).  state = (conv tail (B, K-1, Di), h (B, Di, N)).
 
     ``mask``/``lengths`` as in :func:`rwkv6_timemix`: pad steps of a
     right-padded batch are forced to state no-ops (decay 1, drive 0) and
     the carried conv tail is gathered at each row's last real positions.
+
+    ``return_states`` appends a third result ``(tails (B,T,K-1,Di),
+    hs (B,T,Di,N))``: the conv tail and ssm state *after every step* —
+    speculative verify checkpoints; short T only.
     """
     b, t, d = x.shape
     n = cfg.ssm_state
@@ -216,6 +250,23 @@ def mamba_mix(x: Array, p: MambaParams, cfg: ArchConfig,
         decay = jnp.where(m, decay, jnp.ones((), decay.dtype))
         drive = jnp.where(m, drive, jnp.zeros((), drive.dtype))
 
+    def step_tails():
+        # conv-tail checkpoint after step j+1 = the last K-1 conv inputs
+        # seen up to and including position j (sliding windows of xi_pad)
+        return jnp.stack([xi_pad[:, j + 1:j + kk, :] for j in range(t)],
+                         axis=1)                      # (B,T,K-1,Di)
+
+    if t == 1:
+        # decode/verify fast path: one recurrence step, no chunk
+        # scaffolding (same ops as the scanned step — bit-identical)
+        h = decay[:, 0] * h0.astype(jnp.float32) + drive[:, 0]  # (B,Di,N)
+        y = jnp.einsum("bdn,bn->bd", h, c_t[:, 0])[:, None]     # (B,1,Di)
+        y = y + conv.astype(jnp.float32) * p.d_skip.astype(jnp.float32)
+        y = y.astype(x.dtype) * L.af(z, "silu", pol)
+        out = L.dense(y, p.w_out, pol), (new_tail, h)
+        return out + ((new_tail[:, None], h[:, None]),) if return_states \
+            else out
+
     chunk = max(1, min(64, t))
     assert t % chunk == 0
     n_chunks = t // chunk
@@ -230,15 +281,22 @@ def mamba_mix(x: Array, p: MambaParams, cfg: ArchConfig,
             dec_t, drv_t, c_tt = xs_t
             h = dec_t * h + drv_t                    # (B,Di,N)
             y_t = jnp.einsum("bdn,bn->bd", h, c_tt)
-            return h, y_t
+            ys = (h, y_t) if return_states else y_t
+            return h, ys
 
-        h, y_c = jax.lax.scan(step, h, (dec_c, drv_c, c_c))
-        return h, y_c
+        h, ys_c = jax.lax.scan(step, h, (dec_c, drv_c, c_c))
+        return h, ys_c
 
     c_chunks = c_t.transpose(1, 0, 2).reshape(n_chunks, chunk, b, n)
-    h, y = jax.lax.scan(scan_chunk, h0.astype(jnp.float32),
-                        (to_chunks(decay), to_chunks(drive), c_chunks))
+    h, ys = jax.lax.scan(scan_chunk, h0.astype(jnp.float32),
+                         (to_chunks(decay), to_chunks(drive), c_chunks))
+    h_steps, y = ys if return_states else (None, ys)
     y = y.reshape(t, b, di).transpose(1, 0, 2)
     y = y + conv.astype(jnp.float32) * p.d_skip.astype(jnp.float32)
     y = y.astype(x.dtype) * L.af(z, "silu", pol)
-    return L.dense(y, p.w_out, pol), (new_tail, h)
+    out = L.dense(y, p.w_out, pol), (new_tail, h)
+    if return_states:
+        h_steps = jnp.moveaxis(h_steps.reshape((t,) + h_steps.shape[2:]),
+                               0, 1)                 # (B,T,Di,N)
+        return out + ((step_tails(), h_steps),)
+    return out

@@ -605,3 +605,203 @@ def slot_update(state: DecodeState, sub: DecodeState, slots: Array
                           + [(0, 0)] * (src.ndim - 3))
         out[name] = tgt.at[:, slots].set(src.astype(tgt.dtype), mode="drop")
     return DecodeState(**out)
+
+
+# ---------------------------------------------------------------------------
+# Speculative decode: k+1-position verify with variable per-row commit
+# ---------------------------------------------------------------------------
+
+# Recurrent DecodeState fields that must roll back when drafted tokens are
+# rejected (everything O(1)-per-slot; the K/V caches never roll back — a
+# rejected write sits at a position > the committed ``pos`` and is invalid
+# by the age mask until the real token at that position overwrites it).
+REC_FIELDS = ("x_prev", "cm_prev", "wkv", "conv_tail", "ssm_h")
+
+
+def verify_step(params: Dict[str, Any], state: DecodeState,
+                batch: Dict[str, Array], cfg: ArchConfig,
+                pol: Optional[ExecutionPolicy] = None
+                ) -> Tuple[Array, DecodeState, Dict[str, Array]]:
+    """Score ``K = k+1`` candidate positions per row in **one pass**.
+
+    ``batch = {"tokens": (B, K)}`` — column 0 is each row's committed next
+    token, columns 1..k the drafter's proposals.  The whole window runs
+    through the layer stack as a short sequence (weights read once — the
+    speculative-decode win), with per-query masking in
+    :func:`~repro.models.attention.verify_attention` and per-step
+    recurrent-state checkpoints from the ssm/mamba scans, so
+    ``logits[:, j]`` equals what ``decode_step`` would return after
+    feeding columns ``0..j`` one at a time (asserted bit-exactly by
+    ``tests/test_spec_decode.py`` across every stateful family).
+
+    Returns ``(logits (B, K, V), state, rec_stack)``:
+
+    * ``state``: K/V caches hold all K candidate writes (positions
+      ``pos..pos+K-1``, treated as linear — writes past the cache end are
+      dropped, never ring-wrapped) and ``pos`` is *unchanged* — nothing is
+      committed yet.  A rejected write sits past the committed ``pos`` and
+      stays invalid under the age mask until the real token at that
+      position overwrites it.
+    * ``rec_stack``: per-step checkpoints of the recurrent fields
+      (:data:`REC_FIELDS`), leading axis ``K+1`` where index ``j`` is the
+      state after ``j`` accepted steps (0 = pre-verify).  Feed it to
+      :func:`spec_commit` with the host's per-row accepted counts.
+    """
+    pol = pol or cfg.exec_policy
+    if cfg.input_kind != "tokens":
+        raise ValueError("speculative verify needs token inputs; frame "
+                         "frontends have no draftable vocabulary")
+    x = L.embedding_lookup(batch["tokens"], params["embed"])
+    b, kq = x.shape[:2]
+    pos = state.pos
+    per_row = jnp.ndim(pos) == 1
+    offs = jnp.arange(kq, dtype=jnp.int32)
+    positions = (pos[:, None].astype(jnp.int32) + offs[None, :] if per_row
+                 else pos.astype(jnp.int32) + offs)
+    if state.cache_k is not None:
+        cache_len = state.cache_k.shape[2]
+        if cfg.sliding_window and cache_len <= cfg.sliding_window:
+            windows = jnp.full((cfg.n_layers,), cfg.sliding_window,
+                               jnp.int32)
+        else:
+            windows = jnp.asarray(layer_windows(cfg, cache_len))
+    else:
+        windows = jnp.asarray(layer_windows(cfg, 4096))
+
+    def body(x, xs):
+        if cfg.family == "ssm":
+            bp, xp, cp, wkv = xs
+            h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+            tm_out, (xp2, wkv2), wkv_steps = S.rwkv6_timemix(
+                h, S.Rwkv6Params(**bp["tm"]), cfg, pol, (xp, wkv),
+                return_states=True)
+            x = x + tm_out
+            h2 = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+            cm_out, cp2 = S.rwkv6_channelmix(
+                h2, S.Rwkv6ChannelParams(**bp["cm"]), cfg, pol, cp)
+            # token-shift checkpoints after step j+1 are the mixer inputs
+            # themselves: h[:, j] / h2[:, j]
+            return x + cm_out, (h, h2, wkv_steps, xp2, cp2, wkv2)
+
+        bp, ck, cv, win = xs[0], xs[1], xs[2], xs[3]
+        extra = xs[4:]
+        h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+        q, k, v = A.qkv(h, _attn_params(bp, cfg), cfg, pol, positions)
+        ctx, ck2, cv2 = A.verify_attention(q, k, v, ck, cv, pos, cfg, pol,
+                                           win)
+        attn_out = L.dense(ctx.reshape(b, kq, -1), bp["attn"]["wo"], pol)
+        new_extra = ()
+        if cfg.family == "hybrid":
+            tail, hprev = extra
+            ssm_out, (tail2, h2), (tail_steps, h_steps) = S.mamba_mix(
+                h, S.MambaParams(**bp["mamba"]), cfg, pol, (tail, hprev),
+                return_states=True)
+            attn_out = L.rms_norm(attn_out, bp["norm_attn"], cfg.norm_eps)
+            ssm_out = L.rms_norm(ssm_out, bp["norm_ssm"], cfg.norm_eps)
+            x = x + 0.5 * (attn_out + ssm_out)
+            new_extra = (tail2, h2, tail_steps, h_steps)
+        else:
+            x = x + attn_out
+        h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+        if cfg.family == "moe":
+            moe_out, _ = M.moe_ffn(h, M.MoEParams(**bp["moe"]), cfg, pol)
+            if cfg.dense_residual:
+                moe_out = moe_out + L.swiglu(h, bp["ffn"]["w_gate"],
+                                             bp["ffn"]["w_up"],
+                                             bp["ffn"]["w_down"], pol,
+                                             cfg.activation)
+            x = x + moe_out
+        else:
+            x = x + L.swiglu(h, bp["ffn"]["w_gate"], bp["ffn"]["w_up"],
+                             bp["ffn"]["w_down"], pol, cfg.activation)
+        return x, (ck2, cv2) + new_extra
+
+    def stack(pre, steps):
+        # steps (L, B, K, ...) stacked by the layer scan -> checkpoint
+        # layout (K+1, L, B, ...): index j = state after j steps
+        return jnp.concatenate([pre[None],
+                                jnp.moveaxis(steps, 2, 0).astype(pre.dtype)])
+
+    rec_stack: Dict[str, Array] = {}
+    if cfg.family == "ssm":
+        x, (xp_steps, cp_steps, wkv_steps, xp, cp, wkv) = jax.lax.scan(
+            body, x, (params["blocks"], state.x_prev, state.cm_prev,
+                      state.wkv))
+        new_state = state._replace(x_prev=xp, cm_prev=cp, wkv=wkv)
+        rec_stack = {"x_prev": stack(state.x_prev, xp_steps),
+                     "cm_prev": stack(state.cm_prev, cp_steps),
+                     "wkv": stack(state.wkv, wkv_steps)}
+    elif cfg.family == "hybrid":
+        x, (ck, cv, tail, hh, tail_steps, h_steps) = jax.lax.scan(
+            body, x, (params["blocks"], state.cache_k, state.cache_v,
+                      windows, state.conv_tail, state.ssm_h))
+        new_state = state._replace(cache_k=ck, cache_v=cv, conv_tail=tail,
+                                   ssm_h=hh)
+        rec_stack = {"conv_tail": stack(state.conv_tail, tail_steps),
+                     "ssm_h": stack(state.ssm_h, h_steps)}
+    else:
+        x, (ck, cv) = jax.lax.scan(
+            body, x, (params["blocks"], state.cache_k, state.cache_v,
+                      windows))
+        new_state = state._replace(cache_k=ck, cache_v=cv)
+
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = L.dense(x, params["lm_head"], pol)
+    if cfg.n_codebooks:
+        logits = logits.reshape(b, kq, cfg.n_codebooks, cfg.vocab_size)
+    return logits, new_state, rec_stack
+
+
+def verify_commit_greedy(params: Dict[str, Any], state: DecodeState,
+                         batch: Dict[str, Array], caps: Array,
+                         cfg: ArchConfig,
+                         pol: Optional[ExecutionPolicy] = None
+                         ) -> Tuple[Array, Array, DecodeState]:
+    """Fused greedy speculative step: verify, accept, commit — one program.
+
+    Greedy acceptance needs no host round trip: draft ``j`` is accepted
+    iff ``argmax(logits[:, j]) == tokens[:, j+1]``, so the longest
+    matching prefix, the budget clamp and the state commit all run on
+    device and the host pulls a single ``(B, K)`` int array per engine
+    step (the two-phase :func:`verify_step` + :func:`spec_commit` path
+    remains for sampling, whose rejection test is host-side).
+
+    ``caps`` (B,) int32 — per-row ceiling on *accepted drafts* (min of
+    real draft count and remaining budget - 1); ``-1`` marks a row that
+    must not advance at all (an empty serving slot).
+
+    Returns ``(ids (B, K) greedy targets, advance (B,), new state)`` with
+    ``advance = min(matched, caps) + 1`` (0 for capped-out rows) already
+    committed into ``pos`` and the recurrent state.
+    """
+    logits, st, rec_stack = verify_step(params, state, batch, cfg, pol)
+    ids = jnp.argmax(logits, axis=-1)
+    toks = batch["tokens"]
+    match = (ids[:, :-1] == toks[:, 1:]).astype(jnp.int32)
+    matched = jnp.sum(jnp.cumprod(match, axis=1), axis=1)     # prefix len
+    advance = jnp.maximum(jnp.minimum(matched, caps) + 1, 0)
+    return ids, advance, spec_commit(st, rec_stack, advance)
+
+
+def spec_commit(state: DecodeState, rec_stack: Dict[str, Array],
+                advance: Array) -> DecodeState:
+    """Commit a verify call: advance each row by its accepted length.
+
+    ``advance`` — int32 ``(B,)`` (or scalar for single-stream state) in
+    ``[0..K]``: the number of verified tokens the host accepted per row
+    (accepted drafts + 1, or 0 for rows that must not move — e.g. empty
+    serving slots).  ``pos`` advances by it and every recurrent field is
+    gathered from its ``rec_stack`` checkpoint at that index — the rollback
+    for rejected tokens.  K/V caches pass through: rejected writes sit past
+    the committed ``pos`` and stay masked until overwritten.
+    """
+    advance = jnp.asarray(advance, jnp.int32)
+    out: Dict[str, Any] = {"pos": state.pos + advance.astype(state.pos.dtype)}
+    for name, stack in rec_stack.items():         # stack (K+1, L, B, ...)
+        if jnp.ndim(advance) == 0:
+            out[name] = stack[advance]
+        else:
+            # out[l, b] = stack[advance[b], l, b]
+            out[name] = jax.vmap(lambda s, a: s[a], in_axes=(2, 0),
+                                 out_axes=1)(stack, advance)
+    return state._replace(**out)

@@ -1,0 +1,155 @@
+"""Drafters for speculative decoding: propose k cheap continuation tokens
+per slot, which one bucketed ``verify_step`` call scores all at once.
+
+The engine contract (``runtime/serve_loop.py``) is deliberately tiny so a
+draft *model* can slot in later: a drafter opens one :class:`DraftSession`
+per request (seeded with the prompt + first token), the engine feeds every
+accepted token back through :meth:`DraftSession.extend`, and
+:meth:`DraftSession.draft` returns up to ``k`` proposed continuation
+tokens.  Returning fewer — or none — is always safe: the engine pads the
+verify window and unproposed positions simply never match, degrading to
+plain decode for that step.
+
+:class:`NGramDrafter` is the zero-parameter baseline (prompt-lookup /
+n-gram decoding): find the most recent earlier occurrence of the longest
+suffix n-gram of the context and propose the tokens that followed it,
+re-matching on the extended pseudo-context until ``k`` tokens are drafted
+(a single backward match truncates exactly where the drafter should shine
+— inside a token run or short cycle).  It costs no model FLOPs, and its
+session keeps an incremental n-gram index so the per-step host cost is
+O(k · max_ngram) dict operations, not a context rescan.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+class DraftSession:
+    """Per-request drafting state.  Subclasses override both methods."""
+
+    def extend(self, tokens: Sequence[int]) -> None:
+        """Feed tokens the engine committed (accepted drafts + the
+        correction/bonus token of each verify step)."""
+        raise NotImplementedError
+
+    def draft(self, k: int) -> List[int]:
+        """Propose 0..k continuation tokens (python ints)."""
+        raise NotImplementedError
+
+
+class Drafter:
+    """Drafter factory: one :class:`DraftSession` per request.
+
+    Subclass for a draft *model* (the hook recorded in ROADMAP.md): the
+    session would hold the draft model's decode state and advance it in
+    ``extend`` — the engine neither knows nor cares how proposals are made,
+    only that they are cheap enough for the per-slot host path.
+    """
+
+    def begin(self, context: Sequence[int]) -> DraftSession:
+        """``context``: the request's prompt + first emitted token."""
+        raise NotImplementedError
+
+
+class NGramDrafter(Drafter):
+    """Prompt-lookup drafter: longest-suffix n-gram matching.
+
+    For ``n = max_ngram .. min_ngram``, take the context's final n-gram
+    and find its most recent *earlier* occurrence; on a hit, propose the
+    tokens that followed it, then re-match on the extended pseudo-context
+    until ``k`` tokens are proposed.  ``max_context`` bounds the seed
+    context so session setup stays O(max_context) regardless of prompt
+    length.
+    """
+
+    def __init__(self, max_ngram: int = 3, min_ngram: int = 1,
+                 max_context: int = 512):
+        if not 1 <= min_ngram <= max_ngram:
+            raise ValueError(f"need 1 <= min_ngram <= max_ngram, got "
+                             f"{min_ngram}..{max_ngram}")
+        self.max_ngram = max_ngram
+        self.min_ngram = min_ngram
+        self.max_context = max_context
+
+    def begin(self, context: Sequence[int]) -> "_NGramSession":
+        return _NGramSession(self, context)
+
+    # convenience for tests / one-shot use
+    def draft(self, context: Sequence[int], k: int) -> List[int]:
+        return self.begin(context).draft(k)
+
+
+class _NGramSession(DraftSession):
+    """Incremental n-gram index over one request's context.
+
+    ``last`` maps an n-gram tuple to the (latest, previous) *end*
+    positions of its occurrences in ``ctx``.  ``extend`` registers the
+    appended tokens; ``draft`` speculatively extends the context with its
+    own proposals (recording an undo log) so a run or cycle keeps
+    proposing through the whole window, then rolls the index back.
+    """
+
+    def __init__(self, drafter: NGramDrafter, context: Sequence[int]):
+        self.max_ngram = drafter.max_ngram
+        self.min_ngram = drafter.min_ngram
+        self.ctx: List[int] = [int(t) for t in
+                               context[-drafter.max_context:]]
+        self.last: Dict[Tuple[int, ...],
+                        Tuple[int, Optional[Tuple[int, ...]]]] = {}
+        for end in range(1, len(self.ctx) + 1):
+            self._register(end, None)
+
+    def _register(self, end: int, undo: Optional[list]) -> None:
+        ctx = self.ctx
+        for n in range(self.min_ngram, self.max_ngram + 1):
+            if end >= n:
+                key = tuple(ctx[end - n:end])
+                prev = self.last.get(key)
+                if undo is not None:
+                    undo.append((key, prev))
+                self.last[key] = (end, prev)
+
+    def extend(self, tokens: Sequence[int]) -> None:
+        for t in tokens:
+            self.ctx.append(int(t))
+            self._register(len(self.ctx), None)
+
+    def _lookup(self, k: int) -> List[int]:
+        ctx = self.ctx
+        n_ctx = len(ctx)
+        for n in range(min(self.max_ngram, n_ctx - 1), self.min_ngram - 1,
+                       -1):
+            hit = self.last.get(tuple(ctx[n_ctx - n:]))
+            if hit is None:
+                continue
+            # most recent *earlier* occurrence: the suffix registers
+            # itself at n_ctx, so fall back to the previous occurrence
+            end = hit[0]
+            if end == n_ctx:
+                if hit[1] is None:
+                    continue
+                end = hit[1][0]
+            return ctx[end:end + k]
+        return []
+
+    def draft(self, k: int) -> List[int]:
+        out: List[int] = []
+        undo: list = []
+        while len(out) < k:
+            cont = self._lookup(k - len(out))
+            if not cont:
+                break
+            for t in cont:
+                out.append(t)
+                self.ctx.append(t)
+                self._register(len(self.ctx), undo)
+        # roll the speculative extension back: the engine only commits
+        # verified tokens, via extend()
+        if out:
+            del self.ctx[len(self.ctx) - len(out):]
+            for key, prev in reversed(undo):
+                if prev is None:
+                    del self.last[key]
+                else:
+                    self.last[key] = prev
+        return out

@@ -24,6 +24,18 @@ Per-request outputs are bit-identical to single-stream decoding: the
 model-level seam masks pad steps out of recurrent state updates and each
 slot decodes against its own positions (see ``tests/test_serving.py``).
 
+**Speculative decoding** (``spec_k > 0``): a pluggable drafter
+(``runtime/drafter.py``; n-gram prompt lookup by default, a draft-model
+hook for later) proposes up to ``k`` tokens per slot and one bucketed
+``verify_step`` call scores all ``k+1`` positions in a single pass —
+per-query verify numerics are the exact single-token decode ops, so
+greedy outputs stay bit-identical to plain decode while accepted
+prefixes advance a slot by up to ``k+1`` tokens per engine step (greedy
+engines fuse verify + longest-prefix accept + commit into one program).
+Temperature slots use the rejection-sampling fallback (see
+``_accept_sampled``).  Acceptance bookkeeping lands in
+``metrics["spec_acceptance"]`` / ``metrics["tokens_per_step"]``.
+
 ``GangServeEngine`` preserves the previous lockstep scheduler as the
 benchmark baseline (``benchmarks/serve_bench.py`` replays the same trace
 through both and reports the throughput/latency gap).
@@ -41,6 +53,7 @@ import numpy as np
 
 from repro.kernels import common as kernel_common
 from repro.models.model_zoo import Model
+from repro.runtime.drafter import Drafter, DraftSession, NGramDrafter
 
 
 @dataclasses.dataclass
@@ -67,6 +80,9 @@ class _Slot:
     produced: int                 # tokens emitted so far (incl. prefill's)
     tokens: List[int]
     rng: Optional[np.random.Generator]
+    # per-request drafting state (spec mode only): seeded with prompt +
+    # first token, extended with every committed token
+    session: Optional[DraftSession] = None
 
 
 def next_pow2(n: int) -> int:
@@ -81,13 +97,41 @@ class ServeEngine:
 
     def __init__(self, model: Model, params, max_batch: int = 8,
                  max_seq: int = 256, greedy: bool = True,
-                 min_bucket: int = 16):
+                 min_bucket: int = 16, spec_k: int = 0,
+                 drafter: Optional[Drafter] = None):
         self.model = model
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.greedy = greedy
         self.min_bucket = min_bucket
+        # speculative decoding: a drafter proposes up to spec_k tokens per
+        # slot and one bucketed verify call scores all spec_k+1 positions
+        # in a single pass; greedy outputs stay bit-identical to plain
+        # decode (per-query verify numerics are the exact decode ops).
+        if spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {spec_k}")
+        if spec_k and (model.cfg.input_kind != "tokens"
+                       or model.cfg.n_codebooks):
+            raise ValueError("speculative decoding needs a plain token "
+                             "vocabulary (input_kind='tokens', no "
+                             "codebook factorisation)")
+        if spec_k:
+            # derive the ring-cache predicate from the allocation itself
+            # (abstract: no memory): a slot K/V cache shorter than max_seq
+            # is a ring, and verify_attention's linear-cache writes are
+            # deliberately wrong there (ROADMAP: ring-cache verify is an
+            # open item) — refuse, don't corrupt
+            abs_state = model.init_slot_state(max_batch, max_seq,
+                                              abstract=True)
+            if (abs_state.cache_k is not None
+                    and abs_state.cache_k.shape[2] < max_seq):
+                raise ValueError("speculative decoding over ring caches "
+                                 "(long-context sliding-window decode) is "
+                                 "not supported; lower max_seq or drop "
+                                 "spec_k")
+        self.spec_k = int(spec_k)
+        self.drafter = (drafter or NGramDrafter()) if spec_k else drafter
         # Warm boot: pull the persistent tuned-block table (written by
         # `python -m benchmarks.tune`) into the substrate before the first
         # trace, so serving never re-derives — or worse, never measures —
@@ -111,6 +155,23 @@ class ServeEngine:
             self.trace_counts["insert"] += 1
             return model.slot_update(st, sub, slots)
 
+        def _verify_fn(p, st, toks):
+            self.trace_counts["verify"] += 1
+            logits, st2, rec = model.verify_step(p, st, {"tokens": toks})
+            # greedy targets computed in the same dispatch: the host pulls
+            # (B, K) ints per step, never the logits (sampling slots pull
+            # the full rows lazily — the logits stay on device otherwise)
+            ids = jnp.argmax(logits, axis=-1)
+            return ids, logits, st2, rec
+
+        def _commit_fn(st, rec, adv):
+            self.trace_counts["commit"] += 1
+            return model.spec_commit(st, rec, adv)
+
+        def _verify_greedy_fn(p, st, toks, caps):
+            self.trace_counts["verify"] += 1
+            return model.verify_commit_greedy(p, st, {"tokens": toks}, caps)
+
         self._prefill = jax.jit(_prefill_fn)
         # the old slot state is dead the moment a step returns: donate it
         # so XLA updates the caches in place (donation is a no-op warning
@@ -120,6 +181,12 @@ class ServeEngine:
                                donate_argnums=(1,) if donate else ())
         self._insert = jax.jit(_insert_fn,
                                donate_argnums=(0,) if donate else ())
+        self._verify = jax.jit(_verify_fn,
+                               donate_argnums=(1,) if donate else ())
+        self._commit = jax.jit(_commit_fn,
+                               donate_argnums=(0,) if donate else ())
+        self._verify_greedy = jax.jit(_verify_greedy_fn,
+                                      donate_argnums=(1,) if donate else ())
         # slot state allocates lazily on the first serve(): construction
         # stays cheap (warm boot = load the tuned table, nothing else)
         self._state = None
@@ -135,6 +202,11 @@ class ServeEngine:
         self.metrics: Dict[str, float] = {
             "prefill_tokens": 0, "decode_tokens": 0, "decode_steps": 0,
             "queue_wait_s": 0.0, "slot_occupancy": 0.0,
+            # speculative decode: drafted vs accepted counters plus the
+            # derived spec_acceptance / tokens_per_step rates (recomputed
+            # at the end of every serve() call)
+            "spec_steps": 0, "draft_tokens": 0, "draft_accepted": 0,
+            "spec_acceptance": 0.0, "tokens_per_step": 0.0,
         }
         self._occ_num = 0
         self._occ_den = 0
@@ -178,10 +250,11 @@ class ServeEngine:
         return (int(ids[i]) if rows is None
                 else self._select_token(slot, rows[i]))
 
-    def _select_token(self, slot: _Slot, row: np.ndarray) -> int:
+    def _dist(self, slot: _Slot, row: np.ndarray) -> np.ndarray:
+        """The request's sampling distribution over one logits row
+        (temperature + top_k), shared by plain sampling and the
+        spec-decode rejection-sampling fallback."""
         r = slot.req
-        if self.greedy or r.temperature <= 0.0:
-            return int(np.argmax(row))
         z = row.astype(np.float64) / max(r.temperature, 1e-6)
         k = min(int(r.top_k), z.size)   # top_k >= vocab == no filter
         if 0 < k < z.size:
@@ -190,6 +263,12 @@ class ServeEngine:
         z -= z.max()
         p = np.exp(z)
         p /= p.sum()
+        return p
+
+    def _select_token(self, slot: _Slot, row: np.ndarray) -> int:
+        if self.greedy or slot.req.temperature <= 0.0:
+            return int(np.argmax(row))
+        p = self._dist(slot, row)
         return int(slot.rng.choice(len(p), p=p))
 
     def _retire(self, i: Optional[int], slot: _Slot, done: List[Request]
@@ -221,9 +300,8 @@ class ServeEngine:
             lengths[j] = len(r.prompt)
             slots[j] = free[j]
         key = "tokens" if cfg.input_kind == "tokens" else "frames"
-        logits, sub = self._prefill(self.params, {key: jnp.asarray(arr)},
-                                    jnp.asarray(lengths))
-        self._state = self._insert(self._state, sub, jnp.asarray(slots))
+        logits, sub = self._prefill(self.params, {key: arr}, lengths)
+        self._state = self._insert(self._state, sub, slots)
         ids, rows = self._pull_logits(
             logits, any(r.temperature > 0.0 for r in group))
         now = time.monotonic()
@@ -239,10 +317,174 @@ class ServeEngine:
             slot.next_token = self._next_token(slot, j, ids, rows)
             slot.tokens.append(slot.next_token)
             slot.produced = 1
+            if self.spec_k:
+                slot.session = self.drafter.begin(
+                    [int(t) for t in r.prompt] + [slot.next_token])
             if slot.produced >= r.max_new_tokens:
                 self._retire(None, slot, done)     # 1-token request
             else:
                 self._slots[free[j]] = slot
+
+    def _plain_step(self, active: List[int], done: List[Request]) -> None:
+        """One single-token decode step for every slot (fixed B).  Also
+        the speculative engine's fallback when no slot drafted anything —
+        a (B, k+1) verify that can only emit one token per slot would cost
+        ~2x the plain program for the same result."""
+        cfg = self.model.cfg
+        b = self.max_batch
+        tokens = np.zeros((b, 1), np.int32)
+        for i in active:
+            tokens[i, 0] = self._slots[i].next_token
+        # numpy leaves go straight to the jitted callable: its C++
+        # argument path transfers them ~10x cheaper than an explicit
+        # python-level jnp.asarray + device_put per step
+        if cfg.input_kind == "tokens":
+            nb = {"tokens": tokens}
+        else:               # frame stubs decode over embedded tokens
+            nb = {"frames": np.zeros((b, 1, cfg.d_model), np.float32)}
+        logits, self._state = self._decode(self.params, self._state, nb)
+        ids, rows = self._pull_logits(
+            logits, any(self._slots[i].rng is not None for i in active))
+        self.metrics["decode_steps"] += 1
+        self.metrics["decode_tokens"] += len(active)
+        self._occ_num += len(active)
+        self._occ_den += b
+
+        # retire-and-refill: a finished slot frees this very step
+        for i in active:
+            slot = self._slots[i]
+            slot.next_token = self._next_token(slot, i, ids, rows)
+            slot.tokens.append(slot.next_token)
+            slot.produced += 1
+            if slot.session is not None:
+                slot.session.extend([slot.next_token])
+            if slot.produced >= slot.req.max_new_tokens:
+                self._retire(i, slot, done)
+
+    # -- speculative decoding ----------------------------------------------
+
+    def _accept_greedy(self, ids_row: np.ndarray, drafts: List[int],
+                       cap: int) -> List[int]:
+        """Longest matching prefix: accept drafts while they equal the
+        model's greedy choice, then append the first correction (the
+        bonus token when every draft matched) — exactly the tokens plain
+        greedy decode would have produced, one step at a time."""
+        a = 0
+        while a < cap and int(ids_row[a]) == drafts[a]:
+            a += 1
+        return drafts[:a] + [int(ids_row[a])]
+
+    def _accept_sampled(self, slot: _Slot, rows: np.ndarray,
+                        drafts: List[int], cap: int) -> List[int]:
+        """Rejection-sampling fallback for temperature slots.  The drafter
+        proposes deterministically (q = a point mass), so the standard
+        speculative acceptance rule reduces to: accept draft d with
+        probability p(d); on rejection sample from the residual p with d
+        removed, renormalised — the emitted stream is distributed exactly
+        as plain sampling from p."""
+        out: List[int] = []
+        a = 0
+        while a < cap:
+            p = self._dist(slot, rows[a])
+            t = drafts[a]
+            if slot.rng.random() < p[t]:
+                out.append(t)
+                a += 1
+                continue
+            q = p.copy()
+            q[t] = 0.0
+            s = q.sum()
+            if s <= 0.0:            # p was a point mass on the draft
+                out.append(int(np.argmax(p)))
+            else:
+                out.append(int(slot.rng.choice(len(q), p=q / s)))
+            return out
+        p = self._dist(slot, rows[a])         # bonus position
+        out.append(int(slot.rng.choice(len(p), p=p)))
+        return out
+
+    def _spec_step(self, active: List[int], done: List[Request]) -> None:
+        """One speculative engine step: draft, verify, commit, retire.
+
+        Fixed shapes keep one verify trace: every step scores (B, k+1)
+        tokens; slots with fewer (or no) drafts pad the window and simply
+        fail to match there.  Rejected positions roll back on commit —
+        recurrent state to its per-step checkpoint, K/V writes stay
+        masked until the real token overwrites them (see
+        ``models/transformer.py::verify_step``)."""
+        b = self.max_batch
+        k = self.spec_k
+        toks = np.zeros((b, k + 1), np.int32)
+        # per-row ceiling on accepted drafts: real draft count and what is
+        # left of the budget after the correction/bonus token; -1 keeps
+        # empty slots from advancing at all
+        caps = np.full((b,), -1, np.int32)
+        drafts: Dict[int, List[int]] = {}
+        for i in active:
+            slot = self._slots[i]
+            d = slot.session.draft(k)[:k]
+            drafts[i] = d
+            toks[i, 0] = slot.next_token
+            if d:
+                toks[i, 1:1 + len(d)] = d
+            caps[i] = min(len(d), slot.req.max_new_tokens - slot.produced
+                          - 1)
+        if not any(caps[i] > 0 for i in active):
+            # nothing worth verifying this step (no drafts, or every slot
+            # is one token from its budget): the plain program emits the
+            # identical tokens at a fraction of the verify cost
+            self._plain_step(active, done)
+            return
+        emitted: Dict[int, List[int]] = {}
+        if self.greedy:
+            # fused path: verify + longest-prefix accept + commit in one
+            # dispatch; the host pulls (B, k+1) ids + (B,) advances
+            ids_dev, adv_dev, self._state = self._verify_greedy(
+                self.params, self._state, toks, caps)
+            ids = np.asarray(ids_dev)
+            adv = np.asarray(adv_dev)
+            for i in active:
+                a = int(adv[i]) - 1
+                out = drafts[i][:a] + [int(ids[i, a])]
+                emitted[i] = out
+                self.metrics["draft_tokens"] += len(drafts[i])
+                self.metrics["draft_accepted"] += a
+        else:
+            # two-phase path: sampling slots need the host-side rejection
+            # test, so acceptance happens between verify and commit
+            ids_dev, logits, self._state, rec = self._verify(
+                self.params, self._state, toks)
+            sampling = any(self._slots[i].rng is not None for i in active)
+            ids = np.asarray(ids_dev)                         # (B, k+1)
+            rows = (np.asarray(logits.astype(jnp.float32))    # (B, k+1, V)
+                    if sampling else None)
+            advance = np.zeros((b,), np.int32)
+            for i in active:
+                slot = self._slots[i]
+                if slot.rng is None:
+                    out = self._accept_greedy(ids[i], drafts[i], caps[i])
+                else:
+                    out = self._accept_sampled(slot, rows[i], drafts[i],
+                                               caps[i])
+                advance[i] = len(out)
+                emitted[i] = out
+                self.metrics["draft_tokens"] += len(drafts[i])
+                self.metrics["draft_accepted"] += len(out) - 1
+            self._state = self._commit(self._state, rec, advance)
+        self.metrics["decode_steps"] += 1
+        self.metrics["spec_steps"] += 1
+        self.metrics["decode_tokens"] += sum(len(v) for v in emitted.values())
+        self._occ_num += len(active)
+        self._occ_den += b
+        for i in active:
+            slot = self._slots[i]
+            out = emitted[i]
+            slot.tokens.extend(out)
+            slot.session.extend(out)
+            slot.produced += len(out)
+            slot.next_token = out[-1]
+            if slot.produced >= slot.req.max_new_tokens:
+                self._retire(i, slot, done)
 
     # -- the loop -----------------------------------------------------------
 
@@ -292,33 +534,22 @@ class ServeEngine:
                             - (time.monotonic() - t0))))
                 continue
 
-            # one decode step for every slot (occupied or not: fixed B)
-            tokens = np.zeros((b, 1), np.int32)
-            for i in active:
-                tokens[i, 0] = self._slots[i].next_token
-            if cfg.input_kind == "tokens":
-                nb = {"tokens": jnp.asarray(tokens)}
-            else:               # frame stubs decode over embedded tokens
-                nb = {"frames": jnp.zeros((b, 1, cfg.d_model), jnp.float32)}
-            logits, self._state = self._decode(self.params, self._state, nb)
-            ids, rows = self._pull_logits(
-                logits, any(self._slots[i].rng is not None for i in active))
-            self.metrics["decode_steps"] += 1
-            self.metrics["decode_tokens"] += len(active)
-            self._occ_num += len(active)
-            self._occ_den += b
-
-            # retire-and-refill: a finished slot frees this very step
-            for i in active:
-                slot = self._slots[i]
-                slot.next_token = self._next_token(slot, i, ids, rows)
-                slot.tokens.append(slot.next_token)
-                slot.produced += 1
-                if slot.produced >= slot.req.max_new_tokens:
-                    self._retire(i, slot, done)
+            if self.spec_k:
+                # speculative step: draft k per slot, verify k+1 at once,
+                # commit a variable 0..k+1 advance per slot (falls back to
+                # a plain step when no slot has anything worth verifying)
+                self._spec_step(active, done)
+            else:
+                self._plain_step(active, done)
 
         self.metrics["queue_wait_s"] = self._wait_sum / max(self._n_done, 1)
         self.metrics["slot_occupancy"] = self._occ_num / max(self._occ_den, 1)
+        self.metrics["spec_acceptance"] = (
+            self.metrics["draft_accepted"]
+            / max(self.metrics["draft_tokens"], 1))
+        self.metrics["tokens_per_step"] = (
+            self.metrics["decode_tokens"]
+            / max(self.metrics["decode_steps"], 1))
         return done
 
 
