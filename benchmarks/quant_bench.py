@@ -1,0 +1,192 @@
+"""Quantized-cache serving benchmark: memory / fidelity / throughput.
+
+    PYTHONPATH=src python -m benchmarks.quant_bench [--smoke] [--out BENCH_quant.json]
+
+For each stateful serving family (dense GQA, rwkv ssm, hymba hybrid) this
+compares the fp32 slot cache against the per-block int8 quantized mode
+(``ServeEngine(cache_dtype="int8")``, see ``core/quant_cache.py``) on
+three axes — the Pareto the ROADMAP's "2-4x more slots per HBM byte"
+claim lives on:
+
+  * **slots-per-GB**: bytes of one engine's slot state (``init_slot_state``,
+    abstract — no allocation) per format: fp32, the arch's native mix
+    (bf16 KV + f32 recurrent), int8+scales.  The headline ratio is
+    int8 vs fp32 — the acceptance baseline — and must clear the
+    committed ``slots_per_gb_floor``.
+  * **max-logit-error**: side-by-side prefill + decode feeding the fp
+    model's greedy tokens to both models; the max |logit diff| over the
+    run plus the paper's error metrics (``core/pareto.py``, eqs 4-7).
+    CI gates this against per-arch ceilings in
+    ``benchmarks/quant_baseline.json``.
+  * **tok/s**: the serve-bench arrival trace replayed through an fp and
+    an int8 continuous engine (same requests, greedy), with the int8
+    engine's ``trace_counts`` proving the bucketed one-trace-per-shape
+    discipline survives the format change.
+
+Writes ``BENCH_quant.json``; also registered as the ``quant`` suite of
+``benchmarks/run.py`` (the CI serve-smoke lane runs and gates it).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.serve_bench import _replay, make_trace
+from repro.configs import get_arch
+from repro.core.pareto import error_metrics
+from repro.kernels import tuning
+from repro.models.model_zoo import build_model
+from repro.runtime.serve_loop import ServeEngine
+
+ARCHS = ("glm4-9b", "rwkv6-3b", "hymba-1.5b")
+
+
+def state_bytes(state) -> int:
+    """Total bytes of one slot state (works on abstract states)."""
+    return int(sum(int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+                   for leaf in jax.tree_util.tree_leaves(state)))
+
+
+def _logit_error(model_fp, model_q, params, cfg, steps: int, seed: int
+                 ) -> Dict[str, Any]:
+    """Side-by-side decode: both models eat the fp greedy stream."""
+    rng = np.random.default_rng(seed)
+    prompt = rng.integers(0, cfg.vocab_size, 9).astype(np.int32)
+    batch = {"tokens": jnp.asarray(prompt[None, :])}
+    lg_f, st_f = model_fp.prefill(params, batch, headroom=steps + 8)
+    lg_q, st_q = model_q.prefill(params, batch, headroom=steps + 8)
+    fp_rows: List[np.ndarray] = [np.asarray(lg_f, np.float32).ravel()]
+    q_rows: List[np.ndarray] = [np.asarray(lg_q, np.float32).ravel()]
+    cur = int(jnp.argmax(lg_f.reshape(1, -1)[0]))
+    for _ in range(steps):
+        nb = {"tokens": jnp.asarray([[cur]], jnp.int32)}
+        lg_f, st_f = model_fp.decode_step(params, st_f, nb)
+        lg_q, st_q = model_q.decode_step(params, st_q, nb)
+        fp_rows.append(np.asarray(lg_f, np.float32).ravel())
+        q_rows.append(np.asarray(lg_q, np.float32).ravel())
+        cur = int(jnp.argmax(lg_f.reshape(1, -1)[0]))
+    fp = np.concatenate(fp_rows)
+    q = np.concatenate(q_rows)
+    return {"max_logit_err": float(np.max(np.abs(fp - q))),
+            "logit_span": float(np.max(np.abs(fp))),
+            "err_metrics": {k: round(v, 8)
+                            for k, v in error_metrics(q, fp).items()}}
+
+
+def _arch_cell(arch: str, smoke: bool, max_batch: int, max_seq: int,
+               seed: int) -> Dict[str, Any]:
+    # fp32 end to end: the acceptance baseline is fp32-cache decode, and
+    # an all-f32 pair isolates the cache format as the only difference
+    cfg = get_arch(arch).reduced().scaled(dtype="float32")
+    model_fp = build_model(cfg)
+    model_q = model_fp.with_cache_dtype("int8")
+    params = model_fp.init(jax.random.PRNGKey(seed))
+
+    # memory: bytes of max_batch slots per format
+    native = build_model(get_arch(arch).reduced())    # bf16 KV + f32 rec
+    bytes_fp = state_bytes(model_fp.init_slot_state(max_batch, max_seq,
+                                                    abstract=True))
+    bytes_nat = state_bytes(native.init_slot_state(max_batch, max_seq,
+                                                   abstract=True))
+    bytes_q = state_bytes(model_q.init_slot_state(max_batch, max_seq,
+                                                  abstract=True))
+    gb = float(1 << 30)
+    cell: Dict[str, Any] = {
+        "state_bytes": {"fp32": bytes_fp, "native": bytes_nat,
+                        "int8": bytes_q},
+        "slots_per_gb": {"fp32": round(max_batch * gb / bytes_fp, 1),
+                         "native": round(max_batch * gb / bytes_nat, 1),
+                         "int8": round(max_batch * gb / bytes_q, 1)},
+        "slots_per_gb_ratio": round(bytes_fp / bytes_q, 3),
+        "slots_per_gb_ratio_native": round(bytes_nat / bytes_q, 3),
+    }
+
+    # fidelity: max logit error over a greedy-fed decode run
+    cell.update(_logit_error(model_fp, model_q, params, cfg,
+                             steps=12 if smoke else 48, seed=seed))
+
+    # throughput: same arrival trace through fp and int8 engines
+    n = 12 if smoke else 32
+    eng_fp = ServeEngine(model_fp, params, max_batch=max_batch,
+                         max_seq=max_seq)
+    fp_stats = _replay(eng_fp, make_trace(cfg, n, seed=seed))
+    eng_q = ServeEngine(model_fp, params, max_batch=max_batch,
+                        max_seq=max_seq, cache_dtype="int8")
+    q_stats = _replay(eng_q, make_trace(cfg, n, seed=seed))
+    cell.update({
+        "fp": fp_stats,
+        "int8": q_stats,
+        "tok_s_ratio": round(q_stats["tok_s"]
+                             / max(fp_stats["tok_s"], 1e-9), 3),
+        # single-trace discipline must survive the format change
+        "trace_counts": {k: int(v) for k, v in eng_q.trace_counts.items()},
+    })
+    return cell
+
+
+def sweep(smoke: bool = False, out_path: Optional[str] = None,
+          max_batch: int = 4, max_seq: int = 64, seed: int = 0
+          ) -> Dict[str, Any]:
+    report: Dict[str, Any] = {
+        "meta": {**tuning.version_stamp(), "smoke": smoke,
+                 "max_batch": max_batch, "max_seq": max_seq, "seed": seed,
+                 "baseline": "fp32 slot caches (all-f32 model pair)"},
+        "archs": {},
+    }
+    for arch in ARCHS:
+        report["archs"][arch] = _arch_cell(arch, smoke, max_batch, max_seq,
+                                           seed)
+    if out_path:
+        with open(out_path, "w", encoding="utf-8") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+    return report
+
+
+def run(csv_rows):
+    """`benchmarks.run` suite entry: smoke cells, writes BENCH_quant.json."""
+    report = sweep(smoke=True, out_path="BENCH_quant.json")
+    for arch, c in report["archs"].items():
+        us = 1e6 * c["int8"]["wall_s"] / max(c["int8"]["delivered_tokens"], 1)
+        csv_rows.append((
+            f"quant_int8_{arch}", us,
+            f"tok_s={c['int8']['tok_s']};"
+            f"tok_s_ratio={c['tok_s_ratio']};"
+            f"slots_per_gb_x={c['slots_per_gb_ratio']};"
+            f"max_logit_err={c['max_logit_err']:.4f};"
+            f"decode_traces={c['trace_counts'].get('decode', 0)}"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Quantized int8 serving-cache benchmark "
+                    "(memory / fidelity / throughput Pareto).")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small cells (CI lane)")
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_quant.json",
+                    help="report path ('' to skip)")
+    args = ap.parse_args(argv)
+    report = sweep(smoke=args.smoke, out_path=args.out or None,
+                   max_batch=args.max_batch, max_seq=args.max_seq,
+                   seed=args.seed)
+    print("arch,slots_per_gb_x,max_logit_err,tok_s_fp,tok_s_int8,dropped")
+    for arch, c in report["archs"].items():
+        print(f"{arch},{c['slots_per_gb_ratio']},"
+              f"{c['max_logit_err']:.4f},{c['fp']['tok_s']},"
+              f"{c['int8']['tok_s']},{c['int8']['dropped']}")
+    ok = all(c["int8"]["dropped"] == 0 and c["slots_per_gb_ratio"] >= 2.0
+             for c in report["archs"].values())
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

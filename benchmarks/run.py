@@ -22,6 +22,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
                   motif trace (smoke); writes ``BENCH_spec.json`` and
                   fails on greedy divergence.  Full replay:
                   ``python -m benchmarks.serve_bench --spec``.
+  * quant_*     - int8 quantized slot cache vs fp32 (smoke): slots-per-GB,
+                  max logit error, trace replay tok/s; writes
+                  ``BENCH_quant.json``.  Full sweep:
+                  ``python -m benchmarks.quant_bench``.
 """
 from __future__ import annotations
 
@@ -31,7 +35,7 @@ import traceback
 
 
 SUITE_NAMES = ("pareto", "mac", "caesar", "accuracy", "roofline", "tune",
-               "grads", "serve", "spec")
+               "grads", "serve", "spec", "quant")
 
 
 def main(argv=None):
@@ -42,8 +46,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     from benchmarks import (accuracy_bench, caesar_bench, grad_bench,
-                            mac_bench, pareto_bench, roofline_bench,
-                            serve_bench, tune_bench)
+                            mac_bench, pareto_bench, quant_bench,
+                            roofline_bench, serve_bench, tune_bench)
     suites = {
         "pareto": pareto_bench.run,
         "mac": mac_bench.run,
@@ -54,6 +58,7 @@ def main(argv=None):
         "grads": grad_bench.run,
         "serve": serve_bench.run,
         "spec": serve_bench.run_spec,
+        "quant": quant_bench.run,
     }
     only = args.only or args.suite
     if only:

@@ -75,6 +75,8 @@ def _shape_sets(smoke: bool) -> Dict[str, List[Tuple[int, ...]]]:
             "wkv": [(32, 2, 8)],                      # (t, h, d)
             "flash_attention.bwd": [(32, 32, 2, 1, 8)],
             "wkv.bwd": [(32, 2, 8)],
+            "flash_attention.q8": [(32, 32, 2, 1, 8)],
+            "wkv.q8": [(32, 2, 8)],
         }
     from repro.configs import ARCHS
     acts, softs, macs, flashes, wkvs = set(), set(), set(), set(), set()
@@ -98,6 +100,9 @@ def _shape_sets(smoke: bool) -> Dict[str, List[Tuple[int, ...]]]:
         # Backward tiles tune over the same shapes, under their own keys.
         "flash_attention.bwd": sorted(flashes),
         "wkv.bwd": sorted(wkvs),
+        # Quantized-cache forwards: same shapes, int8 dtype keys.
+        "flash_attention.q8": sorted(flashes),
+        "wkv.q8": sorted(wkvs),
     }
 
 
@@ -141,6 +146,36 @@ def _problems(smoke: bool) -> List[Problem]:
         out.append(Problem("wkv", "wkv", (t, d), jnp.float32,
                            lambda r_=r_, k_=k_, v_=v_, w_=w_, u_=u_:
                            K.wkv(r_, k_, v_, w_, u_)))
+
+    # Quantized-cache forwards: int8 inputs built with the serving-cache
+    # quantizer, swept under the .q8 keys (int8 dtype).
+    from repro.core.quant_cache import quantize_blocked
+
+    for sq, sk, hq, hkv, d in shapes["flash_attention.q8"]:
+        q = jnp.array(rng.normal(size=(1, sq, hq, d)), jnp.float32)
+        kk, ks = quantize_blocked(
+            jnp.array(rng.normal(size=(1, sk, hkv, d)), jnp.float32))
+        v, vs = quantize_blocked(
+            jnp.array(rng.normal(size=(1, sk, hkv, d)), jnp.float32))
+        ks, vs = ks[..., 0], vs[..., 0]
+        out.append(Problem(
+            "flash_attention.q8", "flash_attention.q8", (sq, sk), jnp.int8,
+            lambda q=q, kk=kk, v=v, ks=ks, vs=vs: K.flash_attention_q8(
+                q, kk, v, ks, vs)))
+
+    for t, h, d in shapes["wkv.q8"]:
+        r_ = jnp.array(rng.normal(size=(1, t, h, d)), jnp.float32)
+        k_ = jnp.array(rng.normal(size=(1, t, h, d)), jnp.float32)
+        v_ = jnp.array(rng.normal(size=(1, t, h, d)), jnp.float32)
+        w_ = jnp.array(rng.uniform(0.1, 0.9, (1, t, h, d)), jnp.float32)
+        u_ = jnp.array(rng.normal(size=(h, d)), jnp.float32)
+        s_, ss_ = quantize_blocked(
+            jnp.array(rng.normal(size=(1, h, d, d)), jnp.float32))
+        ss_ = ss_[..., 0]
+        out.append(Problem(
+            "wkv.q8", "wkv.q8", (t, d), jnp.int8,
+            lambda r_=r_, k_=k_, v_=v_, w_=w_, u_=u_, s_=s_, ss_=ss_:
+            K.wkv_q8(r_, k_, v_, w_, u_, s_, ss_)))
 
     # Backward tiles: the call is a full grad step, so the candidate under
     # test (installed by autotune under the .bwd key) is the block the

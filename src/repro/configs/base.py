@@ -94,6 +94,9 @@ class ArchConfig:
     attn_impl: str = "auto"
     attn_chunk: int = 1024
     kv_cache_bits: int = 16        # 8 => FxP8 (Q3.4) quantized KV cache
+    cache_quant: str = "none"      # "int8" => per-block-scaled serving
+                                   # caches (core/quant_cache.py); distinct
+                                   # from the fixed-scale kv_cache_bits=8
     fuse_moe_ffn_ar: bool = False  # fuse dense-residual FFN into the MoE
                                    # psum (one AR per layer instead of two)
     remat: bool = True

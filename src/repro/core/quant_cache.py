@@ -1,0 +1,82 @@
+"""Per-block int8 quantization for serving caches (KV + recurrent state).
+
+The serving stack's quantized cache mode (``ServeEngine(cache_dtype=
+"int8")``) stores every cache family — attention K/V, the rwkv wkv state,
+the mamba ssm state — as int8 values plus one float32 scale per trailing
+block:
+
+    scale = max(|x_block|) / 127        (0 for an all-zero block)
+    q     = clip(round(x / scale), -127, 127)
+    x̂     = q * scale
+
+with the block axis being the tensor's *trailing channel axis* (head_dim
+for K/V, the value channel for wkv, the ssm state width for mamba).  The
+default block spans the whole trailing axis — one scale per written
+vector, i.e. per (slot, position, kv-head) for the KV cache — which is
+what makes the format serving-safe:
+
+  * quantization is **per-vector independent and deterministic**, so
+    quantize-then-scatter equals scatter-then-quantize and any
+    permutation of slots/positions commutes with it (the invariants
+    ``tests/test_quant_numerics.py`` fuzzes);
+  * a decode step touches only its own written vector — O(block) extra
+    work per write, no cross-position rescaling ever;
+  * round-trip error is bounded by ``scale / 2`` per element, i.e.
+    ``max|x_block| / 254``.
+
+This is deliberately distinct from the legacy fixed-scale Q3.4 format
+(``ArchConfig.kv_cache_bits == 8``, ``models/attention.py::KV_Q_SCALE``):
+that path is the paper's FxP8 study and keeps its global scale; this one
+is the serving-memory lever (per-block scales track the actual dynamic
+range, so logit error stays bounded on real activations).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# Guard for all-zero blocks: scale 0 would divide by zero during
+# quantization; clamping the divisor (not the stored scale) keeps the
+# stored scale exactly 0 so dequantization returns exact zeros.
+_TINY = 1e-30
+
+
+def quantize_blocked(x: Array, block: Optional[int] = None
+                     ) -> Tuple[Array, Array]:
+    """Quantize along the trailing axis in blocks of ``block`` channels.
+
+    Returns ``(values int8, scales float32)`` with ``values.shape ==
+    x.shape`` and ``scales.shape == x.shape[:-1] + (d // block,)``.
+    ``block=None`` uses the whole trailing axis (one scale per vector).
+    """
+    d = x.shape[-1]
+    block = d if block is None else int(block)
+    if block < 1 or d % block != 0:
+        raise ValueError(f"block {block} must divide the trailing axis {d}")
+    nb = d // block
+    xb = x.astype(jnp.float32).reshape(x.shape[:-1] + (nb, block))
+    scale = jnp.max(jnp.abs(xb), axis=-1) * (1.0 / 127.0)
+    q = jnp.clip(jnp.round(xb / jnp.maximum(scale, _TINY)[..., None]),
+                 -127.0, 127.0)
+    return q.astype(jnp.int8).reshape(x.shape), scale
+
+
+def dequantize_blocked(q: Array, scale: Array,
+                       dtype=jnp.float32) -> Array:
+    """Inverse of :func:`quantize_blocked`: ``q * scale`` per block.
+
+    ``q`` int8 (..., d); ``scale`` float32 (..., d // block).  The block
+    width is recovered from the shapes.
+    """
+    d = q.shape[-1]
+    nb = scale.shape[-1]
+    if nb < 1 or d % nb != 0:
+        raise ValueError(f"scale blocks {nb} must divide trailing axis {d}")
+    block = d // nb
+    xb = (q.astype(jnp.float32).reshape(q.shape[:-1] + (nb, block))
+          * scale[..., None].astype(jnp.float32))
+    return xb.reshape(q.shape).astype(dtype)

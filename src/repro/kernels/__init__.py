@@ -12,11 +12,12 @@ from repro.kernels.common import (KernelSpec, get_kernel, register,
 from repro.kernels.cordic_act.ops import cordic_act
 from repro.kernels.cordic_mac.ops import cordic_matmul
 from repro.kernels.cordic_softmax.ops import cordic_softmax
-from repro.kernels.flash_attention.ops import flash_attention
-from repro.kernels.wkv.ops import wkv
+from repro.kernels.flash_attention.ops import (flash_attention,
+                                               flash_attention_q8)
+from repro.kernels.wkv.ops import wkv, wkv_q8
 
 __all__ = [
     "KernelSpec", "get_kernel", "register", "registered_kernels",
     "cordic_act", "cordic_matmul", "cordic_softmax", "flash_attention",
-    "wkv",
+    "flash_attention_q8", "wkv", "wkv_q8",
 ]

@@ -10,8 +10,10 @@ import jax.numpy as jnp
 from repro.kernels import common
 from repro.kernels.flash_attention.kernel import flash_attention_nhd
 from repro.kernels.flash_attention.kernel_bwd import flash_attention_bwd_nhd
+from repro.kernels.flash_attention.kernel_q8 import flash_attention_q8_nhd
 from repro.kernels.flash_attention.ref import (attention_bwd_ref,
-                                               attention_nhd_ref)
+                                               attention_nhd_ref,
+                                               attention_q8_nhd_ref)
 
 
 def _to_hsd(x):
@@ -128,6 +130,48 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return common.fused_vjp(fwd, grad, fwd_res, bwd)(q, k, v)
 
 
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def _fwd_q8(q, k, v, k_scale, v_scale, causal: bool, block_q: int,
+            block_k: int, interpret: bool):
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    group = hq // hkv
+    return jax.vmap(
+        lambda qq, kk, vv, ks, vs: flash_attention_q8_nhd(
+            qq, kk, vv, ks, vs, causal=causal, block_q=block_q,
+            block_k=block_k, group=group, interpret=interpret)
+    )(_to_hsd(q), _to_hsd(k), _to_hsd(v),
+      k_scale.transpose(0, 2, 1), v_scale.transpose(0, 2, 1)
+      ).transpose(0, 2, 1, 3)
+
+
+def flash_attention_q8(q: jax.Array, k: jax.Array, v: jax.Array,
+                       k_scale: jax.Array, v_scale: jax.Array, *,
+                       causal: bool = True, block_q: Optional[int] = None,
+                       block_k: Optional[int] = None,
+                       interpret: Optional[bool] = None) -> jax.Array:
+    """Quantized-cache attention.  q: (B, Sq, Hq, d) float; k/v:
+    (B, Sk, Hkv, d) int8 with per-vector float32 scales (B, Sk, Hkv) —
+    the layout :func:`repro.core.quant_cache.quantize_blocked` yields on
+    the serving KV cache (scales squeezed to drop the block axis).
+
+    Blocks resolve through the substrate under the ``flash_attention.q8``
+    key (int8 dtype) — tuned independently of the float forward, since
+    the best K tile shifts when the K/V stream is 4x narrower.
+    Forward-only: the quantized cache is never differentiated through.
+    """
+    interpret = common.resolve_interpret(interpret)
+    if block_q is None or block_k is None:
+        bq, bk = common.pick_block_2d("flash_attention.q8",
+                                      (q.shape[1], k.shape[1]), k.dtype,
+                                      max_rows=128, max_cols=128)
+        block_q = block_q if block_q is not None else bq
+        block_k = block_k if block_k is not None else bk
+    return _fwd_q8(q, k, v, k_scale, v_scale, causal=causal,
+                   block_q=block_q, block_k=block_k, interpret=interpret)
+
+
 def _candidates(shape, dtype):
     """(block_q, block_k) candidates for the (Sq, Sk) key: divisors keep
     the kernel's own clamp a no-op, so the measured block is the run
@@ -161,3 +205,10 @@ common.register(common.KernelSpec(
     name="flash_attention.bwd", kernel=flash_attention_bwd_nhd,
     ref=attention_bwd_ref, candidates=_bwd_candidates,
     tags=("float", "attention", "backward")))
+
+# Quantized-cache forward: same (Sq, Sk) cache-key shape, int8 dtype key,
+# own registry entry so `benchmarks.tune` sweeps its tiles separately.
+common.register(common.KernelSpec(
+    name="flash_attention.q8", kernel=flash_attention_q8_nhd,
+    ref=attention_q8_nhd_ref, candidates=_candidates,
+    tags=("int8", "attention", "serving")))

@@ -22,6 +22,17 @@ def attention_nhd_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                       vv.astype(jnp.float32)).astype(q.dtype)
 
 
+def attention_q8_nhd_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         k_scale: jax.Array, v_scale: jax.Array, *,
+                         causal: bool = True, group: int = 1) -> jax.Array:
+    """Oracle for the quantized-cache kernel: dequantize (one float32
+    scale per (kv head, position) vector), then the float reference.
+    k/v (Hkv,Sk,d) int8; scales (Hkv,Sk)."""
+    kk = k.astype(jnp.float32) * k_scale.astype(jnp.float32)[..., None]
+    vv = v.astype(jnp.float32) * v_scale.astype(jnp.float32)[..., None]
+    return attention_nhd_ref(q, kk, vv, causal=causal, group=group)
+
+
 def attention_bwd_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                       do: jax.Array, *, causal: bool = True,
                       group: int = 1):

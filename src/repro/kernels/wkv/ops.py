@@ -10,7 +10,8 @@ import jax.numpy as jnp
 from repro.kernels import common
 from repro.kernels.wkv.kernel import wkv_recurrence
 from repro.kernels.wkv.kernel_bwd import wkv_recurrence_bwd
-from repro.kernels.wkv.ref import wkv_bwd_ref, wkv_recurrence_ref
+from repro.kernels.wkv.kernel_q8 import wkv_recurrence_q8
+from repro.kernels.wkv.ref import wkv_bwd_ref, wkv_q8_ref, wkv_recurrence_ref
 
 
 def _flat(x):
@@ -121,6 +122,42 @@ def wkv(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
     return common.fused_vjp(fwd, _exact_wkv, fwd_res, bwd)(r, k, v, w, u)
 
 
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def _fwd_q8(r, k, v, w, u, state, state_scale, block_t: int,
+            interpret: bool):
+    b, t, h, d = r.shape
+    dk, dv = state.shape[-2:]
+    uu = jnp.tile(u[None], (b, 1, 1)).reshape(b * h, d)
+    out, s_fin, s_scale = wkv_recurrence_q8(
+        _flat(r), _flat(k), _flat(v), _flat(w), uu,
+        state.reshape(b * h, dk, dv), state_scale.reshape(b * h, dk),
+        block_t=block_t, interpret=interpret)
+    return (_unflat(out, b, h), s_fin.reshape(b, h, dk, dv),
+            s_scale.reshape(b, h, dk))
+
+
+def wkv_q8(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+           u: jax.Array, state: jax.Array, state_scale: jax.Array, *,
+           block_t: Optional[int] = None,
+           interpret: Optional[bool] = None):
+    """Quantized-state wkv.  r/k/v/w: (B, T, H, d); u: (H, d); state:
+    (B, H, dk, dv) int8 with per-row float32 scales (B, H, dk) — the
+    serving slot state's wkv/wkv_scale leaves for one layer.
+
+    Returns ``(out (B, T, H, dv), state int8, state_scale)`` — the state
+    after the T steps, requantized in-kernel (one int8 round-trip per
+    call, matching the jnp serving path).  Blocks resolve under the
+    ``wkv.q8`` substrate key.  Forward-only.
+    """
+    interpret = common.resolve_interpret(interpret)
+    if block_t is None:
+        block_t = common.pick_block_rows("wkv.q8",
+                                         (r.shape[1], r.shape[3]),
+                                         state.dtype, max_rows=64)
+    return _fwd_q8(r, k, v, w, u, state, state_scale, block_t=block_t,
+                   interpret=interpret)
+
+
 def _candidates(shape, dtype):
     """(block_t, d) candidates for the (T, d) key: the time axis is the
     only tunable dimension (sequential sweep); it must divide T."""
@@ -147,3 +184,9 @@ common.register(common.KernelSpec(
 common.register(common.KernelSpec(
     name="wkv.bwd", kernel=wkv_recurrence_bwd, ref=wkv_bwd_ref,
     candidates=_bwd_candidates, tags=("float", "recurrent", "backward")))
+
+# Quantized-state forward: same (T, d) cache-key shape, int8 dtype key,
+# own registry entry so `benchmarks.tune` sweeps its time block.
+common.register(common.KernelSpec(
+    name="wkv.q8", kernel=wkv_recurrence_q8, ref=wkv_q8_ref,
+    candidates=_candidates, tags=("int8", "recurrent", "serving")))

@@ -29,6 +29,34 @@ def wkv_recurrence_ref(r: jax.Array, k: jax.Array, v: jax.Array,
     return jax.vmap(one)(r, k, v, w, u.astype(jnp.float32)).astype(r.dtype)
 
 
+def wkv_q8_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+               u: jax.Array, s0: jax.Array, s0_scale: jax.Array):
+    """Oracle for the quantized-state kernel: dequantize the int8 state
+    (one float32 scale per dk row), run the f32 scan from it, requantize
+    the final state the same way.  Returns (out, s_fin int8, s_scale)."""
+
+    def one(r1, k1, v1, w1, u1, s1):
+        def step(s, xs):
+            rt, kt, vt, wt = xs
+            kv = kt[:, None] * vt[None, :]
+            y = (rt * u1) @ kv + rt @ s
+            s = wt[:, None] * s + kv
+            return s, y
+
+        return jax.lax.scan(step, s1,
+                            (r1.astype(jnp.float32),
+                             k1.astype(jnp.float32),
+                             v1.astype(jnp.float32),
+                             w1.astype(jnp.float32)))
+
+    s_init = s0.astype(jnp.float32) * s0_scale.astype(jnp.float32)[..., None]
+    s_fin, out = jax.vmap(one)(r, k, v, w, u.astype(jnp.float32), s_init)
+    sc = jnp.max(jnp.abs(s_fin), axis=-1) * (1.0 / 127.0)
+    q = jnp.clip(jnp.round(s_fin / jnp.maximum(sc, 1e-30)[..., None]),
+                 -127.0, 127.0)
+    return out.astype(r.dtype), q.astype(jnp.int8), sc
+
+
 def wkv_bwd_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
                 u: jax.Array, dy: jax.Array):
     """Exact (dr, dk, dv, dw, du) via autodiff of the scan reference —

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, ExecutionPolicy
+from repro.core.quant_cache import dequantize_blocked, quantize_blocked
 from repro.models import layers as L
 from repro.parallel.sharding import constrain, get_abstract_mesh
 
@@ -167,7 +168,9 @@ def attention(q, k, v, cfg: ArchConfig, pol: ExecutionPolicy, q_pos, k_pos,
 
 def decode_attention(q: Array, k_new: Array, v_new: Array, cache_k: Array,
                      cache_v: Array, pos: Array, cfg: ArchConfig,
-                     pol: ExecutionPolicy, window) -> Tuple[Array, Array, Array]:
+                     pol: ExecutionPolicy, window,
+                     scale_k: Optional[Array] = None,
+                     scale_v: Optional[Array] = None):
     """q/k_new/v_new: (B,1,H*,dh); cache: (B,S,Hkv,dh) ring-written at pos.
 
     ``pos`` is the tokens-seen counter: a scalar (every row at the same
@@ -175,14 +178,26 @@ def decode_attention(q: Array, k_new: Array, v_new: Array, cache_k: Array,
     serving engine's per-slot positions, where each decode slot was
     prefilled at a different time and length).
 
-    Returns (ctx (B,1,Hq,dh), cache_k, cache_v).
+    With ``scale_k``/``scale_v`` (B,S,Hkv,nb) the cache is the per-block
+    int8 format of :mod:`repro.core.quant_cache`: each new K/V vector is
+    quantized on write (its scale lands at the same ring slot) and the
+    whole cache is dequantized on read.  Without them, an int8 cache is
+    the legacy fixed-scale Q3.4 format (:data:`KV_Q_SCALE`).
+
+    Returns (ctx (B,1,Hq,dh), cache_k, cache_v) — plus the updated
+    (scale_k, scale_v) when per-block scales are in play.
     """
     b, _, hq, dh = q.shape
     s_max = cache_k.shape[1]
     slot = jnp.mod(pos, s_max)
-    quant = cache_k.dtype == jnp.int8
-    k_w = quantize_kv(k_new) if quant else k_new.astype(cache_k.dtype)
-    v_w = quantize_kv(v_new) if quant else v_new.astype(cache_v.dtype)
+    blocked = scale_k is not None
+    if blocked:
+        k_w, k_s = quantize_blocked(k_new)
+        v_w, v_s = quantize_blocked(v_new)
+    else:
+        quant = cache_k.dtype == jnp.int8
+        k_w = quantize_kv(k_new) if quant else k_new.astype(cache_k.dtype)
+        v_w = quantize_kv(v_new) if quant else v_new.astype(cache_v.dtype)
     per_row = jnp.ndim(pos) == 1
     if per_row:
         # batched scatter: each row's new K/V lands at its own column
@@ -190,16 +205,25 @@ def decode_attention(q: Array, k_new: Array, v_new: Array, cache_k: Array,
         rows = jnp.arange(b)
         cache_k = cache_k.at[rows, slot].set(k_w[:, 0])
         cache_v = cache_v.at[rows, slot].set(v_w[:, 0])
+        if blocked:
+            scale_k = scale_k.at[rows, slot].set(k_s[:, 0])
+            scale_v = scale_v.at[rows, slot].set(v_s[:, 0])
     else:
         cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_w, slot,
                                                       axis=1)
         cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_w, slot,
                                                       axis=1)
+        if blocked:
+            scale_k = jax.lax.dynamic_update_slice_in_dim(scale_k, k_s,
+                                                          slot, axis=1)
+            scale_v = jax.lax.dynamic_update_slice_in_dim(scale_v, v_s,
+                                                          slot, axis=1)
     hkv = cache_k.shape[2]
     g = hq // hkv
     qg = q.reshape(b, 1, hkv, g, dh)
-    scores = jnp.einsum("bskgd,btkd->bkgst", qg,
-                        dequantize_kv(cache_k, q.dtype)) / jnp.sqrt(float(dh))
+    keys = (dequantize_blocked(cache_k, scale_k, q.dtype) if blocked
+            else dequantize_kv(cache_k, q.dtype))
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, keys) / jnp.sqrt(float(dh))
     # ring-buffer positions: slot t holds absolute position
     #   p_t = t            if t <= pos (current wrap)  [no-wrap case]
     # with wrapping, valid entries are the last min(pos+1, s_max) writes.
@@ -214,14 +238,20 @@ def decode_attention(q: Array, k_new: Array, v_new: Array, cache_k: Array,
         mask = mask[None, None, None, None, :]
     scores = jnp.where(mask, scores.astype(jnp.float32), NEG_INF)
     probs = L.softmax(scores, pol).astype(q.dtype)
-    ctx = jnp.einsum("bkgst,btkd->bskgd", probs, dequantize_kv(cache_v, q.dtype))
+    vals = (dequantize_blocked(cache_v, scale_v, q.dtype) if blocked
+            else dequantize_kv(cache_v, q.dtype))
+    ctx = jnp.einsum("bkgst,btkd->bskgd", probs, vals)
+    if blocked:
+        return (ctx.reshape(b, 1, hq, dh), cache_k, cache_v,
+                scale_k, scale_v)
     return ctx.reshape(b, 1, hq, dh), cache_k, cache_v
 
 
 def verify_attention(q: Array, k_new: Array, v_new: Array, cache_k: Array,
                      cache_v: Array, pos: Array, cfg: ArchConfig,
-                     pol: ExecutionPolicy, window
-                     ) -> Tuple[Array, Array, Array]:
+                     pol: ExecutionPolicy, window,
+                     scale_k: Optional[Array] = None,
+                     scale_v: Optional[Array] = None):
     """Speculative verify: K candidate positions scored in one pass.
 
     q/k_new/v_new: (B,K,H*,dh) — row b's candidates sit at absolute
@@ -241,25 +271,40 @@ def verify_attention(q: Array, k_new: Array, v_new: Array, cache_k: Array,
 
     Per-query numerics are the plain :func:`decode_attention` ops at the
     same position, which is what keeps greedy spec decoding bit-identical
-    to single-token decode.  Returns (ctx (B,K,Hq,dh), cache_k, cache_v).
+    to single-token decode.  With ``scale_k``/``scale_v`` the cache is the
+    per-block int8 format (see :func:`decode_attention`): candidate scales
+    land beside their values with the same drop semantics, so a rejected
+    write's scale is just as invisible as its value until overwritten.
+
+    Returns (ctx (B,K,Hq,dh), cache_k, cache_v) — plus the updated
+    (scale_k, scale_v) when per-block scales are in play.
     """
     b, kq, hq, dh = q.shape
     s_max = cache_k.shape[1]
     posv = pos if jnp.ndim(pos) == 1 else jnp.broadcast_to(pos, (b,))
     offs = jnp.arange(kq, dtype=posv.dtype)
     wpos = posv[:, None] + offs[None, :]                  # (B,K) absolute
-    quant = cache_k.dtype == jnp.int8
-    k_w = quantize_kv(k_new) if quant else k_new.astype(cache_k.dtype)
-    v_w = quantize_kv(v_new) if quant else v_new.astype(cache_v.dtype)
+    blocked = scale_k is not None
+    if blocked:
+        k_w, k_s = quantize_blocked(k_new)
+        v_w, v_s = quantize_blocked(v_new)
+    else:
+        quant = cache_k.dtype == jnp.int8
+        k_w = quantize_kv(k_new) if quant else k_new.astype(cache_k.dtype)
+        v_w = quantize_kv(v_new) if quant else v_new.astype(cache_v.dtype)
     rows = jnp.arange(b)[:, None]
     # linear-cache write: out-of-range columns drop (never wrap)
     cache_k = cache_k.at[rows, wpos].set(k_w, mode="drop")
     cache_v = cache_v.at[rows, wpos].set(v_w, mode="drop")
+    if blocked:
+        scale_k = scale_k.at[rows, wpos].set(k_s, mode="drop")
+        scale_v = scale_v.at[rows, wpos].set(v_s, mode="drop")
     hkv = cache_k.shape[2]
     g = hq // hkv
     qg = q.reshape(b, kq, hkv, g, dh)
-    scores = jnp.einsum("bskgd,btkd->bkgst", qg,
-                        dequantize_kv(cache_k, q.dtype)) / jnp.sqrt(float(dh))
+    keys = (dequantize_blocked(cache_k, scale_k, q.dtype) if blocked
+            else dequantize_kv(cache_k, q.dtype))
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, keys) / jnp.sqrt(float(dh))
     t = jnp.arange(s_max)
     age = jnp.mod(wpos[..., None] - t, s_max)             # (B,K,S); 0=self
     valid = age < jnp.minimum(wpos[..., None] + 1, s_max)
@@ -274,6 +319,10 @@ def verify_attention(q: Array, k_new: Array, v_new: Array, cache_k: Array,
     mask = mask[:, None, None]                            # (B,1,1,K,S)
     scores = jnp.where(mask, scores.astype(jnp.float32), NEG_INF)
     probs = L.softmax(scores, pol).astype(q.dtype)
-    ctx = jnp.einsum("bkgst,btkd->bskgd", probs,
-                     dequantize_kv(cache_v, q.dtype))
+    vals = (dequantize_blocked(cache_v, scale_v, q.dtype) if blocked
+            else dequantize_kv(cache_v, q.dtype))
+    ctx = jnp.einsum("bkgst,btkd->bskgd", probs, vals)
+    if blocked:
+        return (ctx.reshape(b, kq, hq, dh), cache_k, cache_v,
+                scale_k, scale_v)
     return ctx.reshape(b, kq, hq, dh), cache_k, cache_v

@@ -41,6 +41,25 @@ class Model:
         inactive = per_expert * (cfg.n_experts - cfg.top_k)
         return total - inactive
 
+    # -- cache format --------------------------------------------------------
+    def with_cache_dtype(self, cache_dtype: Optional[str]) -> "Model":
+        """Same architecture with the serving-cache storage format swapped.
+
+        ``"int8"`` turns on the per-block-scaled quantized caches
+        (:mod:`repro.core.quant_cache`); ``None`` or a float name keeps
+        full-precision caches.  Parameter shapes/specs are unchanged —
+        only ``init_decode_state``/``init_slot_state`` layouts and the
+        decode read/write paths differ.
+        """
+        if cache_dtype in (None, "none", "float", "fp32", "fp16", "bf16"):
+            return self
+        if cache_dtype == "int8":
+            if self.cfg.cache_quant == "int8":
+                return self
+            return Model(dataclasses.replace(self.cfg, cache_quant="int8"))
+        raise ValueError(f"unknown cache_dtype {cache_dtype!r}; expected "
+                         f"'int8', a float dtype name, or None")
+
     # -- compute ------------------------------------------------------------
     def forward(self, params, batch, pol: Optional[ExecutionPolicy] = None):
         return T.forward(params, batch, self.cfg, pol)

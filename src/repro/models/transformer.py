@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig, ExecutionPolicy
+from repro.core.quant_cache import dequantize_blocked, quantize_blocked
 from repro.models import attention as A
 from repro.models import layers as L
 from repro.models import moe as M
@@ -296,7 +297,12 @@ def loss_fn(params, batch, cfg: ArchConfig,
 # ---------------------------------------------------------------------------
 
 class DecodeState(NamedTuple):
-    """Stacked (n_layers leading dim) recurrent state for every family."""
+    """Stacked (n_layers leading dim) recurrent state for every family.
+
+    The ``*scale*`` fields carry the per-block float32 scales of the
+    quantized cache mode (``cfg.cache_quant == "int8"``, see
+    :mod:`repro.core.quant_cache`); they stay ``None`` otherwise.
+    """
     cache_k: Optional[Array] = None     # (L,B,S,Hkv,dh)
     cache_v: Optional[Array] = None
     pos: Optional[Array] = None         # scalar int32 tokens-seen
@@ -306,13 +312,32 @@ class DecodeState(NamedTuple):
     wkv: Optional[Array] = None         # (L,B,H,dk,dk) rwkv state
     conv_tail: Optional[Array] = None   # (L,B,K-1,Di) mamba conv tail
     ssm_h: Optional[Array] = None       # (L,B,Di,N) mamba state
+    # per-block int8 cache scales (cache_quant="int8" only)
+    scale_k: Optional[Array] = None     # (L,B,S,Hkv,1)
+    scale_v: Optional[Array] = None     # (L,B,S,Hkv,1)
+    wkv_scale: Optional[Array] = None   # (L,B,H,dk,1)
+    ssm_scale: Optional[Array] = None   # (L,B,Di,1)
+
+
+def _cache_quant(cfg: ArchConfig) -> bool:
+    """Whether the per-block int8 serving-cache format is active."""
+    if cfg.cache_quant not in ("none", "int8"):
+        raise ValueError(f"unknown cache_quant {cfg.cache_quant!r}; "
+                         f"expected 'none' or 'int8'")
+    qc = cfg.cache_quant == "int8"
+    if qc and cfg.kv_cache_bits == 8:
+        raise ValueError(
+            "cache_quant='int8' (per-block scales) and kv_cache_bits=8 "
+            "(fixed Q3.4 scale) are mutually exclusive KV-cache formats")
+    return qc
 
 
 def init_decode_state(cfg: ArchConfig, batch: int, max_seq: int,
                       abstract: bool = False) -> DecodeState:
     Lr, D, dh = cfg.n_layers, cfg.d_model, cfg.head_dim_
     dt = _dt(cfg)
-    kv_dt = jnp.int8 if cfg.kv_cache_bits == 8 else dt
+    qc = _cache_quant(cfg)
+    kv_dt = jnp.int8 if (cfg.kv_cache_bits == 8 or qc) else dt
     mk = (jax.ShapeDtypeStruct if abstract
           else (lambda sh, d: jnp.zeros(sh, d)))
     fields: Dict[str, Any] = {"pos": (jax.ShapeDtypeStruct((), jnp.int32)
@@ -326,13 +351,27 @@ def init_decode_state(cfg: ArchConfig, batch: int, max_seq: int,
                                kv_dt)
         fields["cache_v"] = mk((Lr, batch, cache_len, cfg.n_kv_heads, dh),
                                kv_dt)
+        if qc:
+            fields["scale_k"] = mk((Lr, batch, cache_len, cfg.n_kv_heads, 1),
+                                   jnp.float32)
+            fields["scale_v"] = mk((Lr, batch, cache_len, cfg.n_kv_heads, 1),
+                                   jnp.float32)
     if cfg.family == "ssm":
         fields["x_prev"] = mk((Lr, batch, D), dt)
         fields["cm_prev"] = mk((Lr, batch, D), dt)
-        fields["wkv"] = mk((Lr, batch, cfg.n_heads, dh, dh), jnp.float32)
+        # quantized mode stores the O(1) recurrent state itself as int8;
+        # the tiny token-shift boundaries (x_prev/cm_prev) stay exact
+        fields["wkv"] = mk((Lr, batch, cfg.n_heads, dh, dh),
+                           jnp.int8 if qc else jnp.float32)
+        if qc:
+            fields["wkv_scale"] = mk((Lr, batch, cfg.n_heads, dh, 1),
+                                     jnp.float32)
     if cfg.family == "hybrid":
         fields["conv_tail"] = mk((Lr, batch, cfg.ssm_conv - 1, D), dt)
-        fields["ssm_h"] = mk((Lr, batch, D, cfg.ssm_state), jnp.float32)
+        fields["ssm_h"] = mk((Lr, batch, D, cfg.ssm_state),
+                             jnp.int8 if qc else jnp.float32)
+        if qc:
+            fields["ssm_scale"] = mk((Lr, batch, D, 1), jnp.float32)
     return DecodeState(**fields)
 
 
@@ -360,9 +399,17 @@ def decode_step(params: Dict[str, Any], state: DecodeState,
     else:
         windows = jnp.asarray(layer_windows(cfg, 4096))
 
+    qc = _cache_quant(cfg)
+
     def body(x, xs):
         if cfg.family == "ssm":
-            bp, xp, cp, wkv = xs
+            if qc:
+                bp, xp, cp, wkv_q, wkv_s = xs
+                # dequant -> exact f32 recurrence step -> requant: the
+                # O(1) state round-trips through int8 once per token
+                wkv = dequantize_blocked(wkv_q, wkv_s)
+            else:
+                bp, xp, cp, wkv = xs
             h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
             tm_out, (xp2, wkv2) = S.rwkv6_timemix(
                 h, S.Rwkv6Params(**bp["tm"]), cfg, pol, (xp, wkv))
@@ -370,26 +417,49 @@ def decode_step(params: Dict[str, Any], state: DecodeState,
             h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
             cm_out, cp2 = S.rwkv6_channelmix(
                 h, S.Rwkv6ChannelParams(**bp["cm"]), cfg, pol, cp)
+            if qc:
+                wkv2, wkv2_s = quantize_blocked(wkv2)
+                return x + cm_out, (xp2, cp2, wkv2, wkv2_s)
             return x + cm_out, (xp2, cp2, wkv2)
 
-        bp, ck, cv, win = xs[0], xs[1], xs[2], xs[3]
-        extra = xs[4:]
+        bp, ck, cv = xs[0], xs[1], xs[2]
+        if qc:
+            sk_, sv_, win = xs[3], xs[4], xs[5]
+            extra = xs[6:]
+        else:
+            win = xs[3]
+            extra = xs[4:]
         h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
         positions = (pos[:, None].astype(jnp.int32) if per_row
                      else jnp.full((1,), pos, jnp.int32))
         q, k, v = A.qkv(h, _attn_params(bp, cfg), cfg, pol, positions)
-        ctx, ck2, cv2 = A.decode_attention(q, k, v, ck, cv, pos, cfg, pol,
-                                           win)
+        if qc:
+            ctx, ck2, cv2, sk2, sv2 = A.decode_attention(
+                q, k, v, ck, cv, pos, cfg, pol, win,
+                scale_k=sk_, scale_v=sv_)
+            new_caches = (ck2, cv2, sk2, sv2)
+        else:
+            ctx, ck2, cv2 = A.decode_attention(q, k, v, ck, cv, pos, cfg,
+                                               pol, win)
+            new_caches = (ck2, cv2)
         attn_out = L.dense(ctx.reshape(b, 1, -1), bp["attn"]["wo"], pol)
         new_extra = ()
         if cfg.family == "hybrid":
-            tail, hprev = extra
+            if qc:
+                tail, hq_, hs_ = extra
+                hprev = dequantize_blocked(hq_, hs_)
+            else:
+                tail, hprev = extra
             ssm_out, (tail2, h2) = S.mamba_mix(
                 h, S.MambaParams(**bp["mamba"]), cfg, pol, (tail, hprev))
             attn_out = L.rms_norm(attn_out, bp["norm_attn"], cfg.norm_eps)
             ssm_out = L.rms_norm(ssm_out, bp["norm_ssm"], cfg.norm_eps)
             x = x + 0.5 * (attn_out + ssm_out)
-            new_extra = (tail2, h2)
+            if qc:
+                h2, h2_s = quantize_blocked(h2)
+                new_extra = (tail2, h2, h2_s)
+            else:
+                new_extra = (tail2, h2)
         else:
             x = x + attn_out
         h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
@@ -404,25 +474,48 @@ def decode_step(params: Dict[str, Any], state: DecodeState,
         else:
             x = x + L.swiglu(h, bp["ffn"]["w_gate"], bp["ffn"]["w_up"],
                              bp["ffn"]["w_down"], pol, cfg.activation)
-        return x, (ck2, cv2) + new_extra
+        return x, new_caches + new_extra
 
     if cfg.family == "ssm":
-        x, (xp, cp, wkv) = jax.lax.scan(
-            body, x, (params["blocks"], state.x_prev, state.cm_prev,
-                      state.wkv))
-        new_state = state._replace(x_prev=xp, cm_prev=cp, wkv=wkv,
-                                   pos=pos + 1)
+        if qc:
+            x, (xp, cp, wkv, wkv_s) = jax.lax.scan(
+                body, x, (params["blocks"], state.x_prev, state.cm_prev,
+                          state.wkv, state.wkv_scale))
+            new_state = state._replace(x_prev=xp, cm_prev=cp, wkv=wkv,
+                                       wkv_scale=wkv_s, pos=pos + 1)
+        else:
+            x, (xp, cp, wkv) = jax.lax.scan(
+                body, x, (params["blocks"], state.x_prev, state.cm_prev,
+                          state.wkv))
+            new_state = state._replace(x_prev=xp, cm_prev=cp, wkv=wkv,
+                                       pos=pos + 1)
     elif cfg.family == "hybrid":
-        x, (ck, cv, tail, hh) = jax.lax.scan(
-            body, x, (params["blocks"], state.cache_k, state.cache_v,
-                      windows, state.conv_tail, state.ssm_h))
-        new_state = state._replace(cache_k=ck, cache_v=cv, conv_tail=tail,
-                                   ssm_h=hh, pos=pos + 1)
+        if qc:
+            x, (ck, cv, sk, sv, tail, hh, hs) = jax.lax.scan(
+                body, x, (params["blocks"], state.cache_k, state.cache_v,
+                          state.scale_k, state.scale_v, windows,
+                          state.conv_tail, state.ssm_h, state.ssm_scale))
+            new_state = state._replace(cache_k=ck, cache_v=cv, scale_k=sk,
+                                       scale_v=sv, conv_tail=tail, ssm_h=hh,
+                                       ssm_scale=hs, pos=pos + 1)
+        else:
+            x, (ck, cv, tail, hh) = jax.lax.scan(
+                body, x, (params["blocks"], state.cache_k, state.cache_v,
+                          windows, state.conv_tail, state.ssm_h))
+            new_state = state._replace(cache_k=ck, cache_v=cv,
+                                       conv_tail=tail, ssm_h=hh, pos=pos + 1)
     else:
-        x, (ck, cv) = jax.lax.scan(
-            body, x, (params["blocks"], state.cache_k, state.cache_v,
-                      windows))
-        new_state = state._replace(cache_k=ck, cache_v=cv, pos=pos + 1)
+        if qc:
+            x, (ck, cv, sk, sv) = jax.lax.scan(
+                body, x, (params["blocks"], state.cache_k, state.cache_v,
+                          state.scale_k, state.scale_v, windows))
+            new_state = state._replace(cache_k=ck, cache_v=cv, scale_k=sk,
+                                       scale_v=sv, pos=pos + 1)
+        else:
+            x, (ck, cv) = jax.lax.scan(
+                body, x, (params["blocks"], state.cache_k, state.cache_v,
+                          windows))
+            new_state = state._replace(cache_k=ck, cache_v=cv, pos=pos + 1)
 
     x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
     logits = L.dense(x, params["lm_head"], pol)
@@ -512,32 +605,66 @@ def prefill(params, batch, cfg: ArchConfig,
                              bp["ffn"]["w_down"], pol, cfg.activation)
         return x, (k, v) + ys_extra
 
+    qc = _cache_quant(cfg)
+
+    def pad_seq(t):
+        # zero-pad along the sequence axis up to the slot cache length
+        tgt = state.cache_k.shape[2]
+        if t.shape[2] != tgt:
+            t = jnp.pad(t, ((0, 0), (0, 0), (0, tgt - t.shape[2]))
+                        + ((0, 0),) * (t.ndim - 3))
+        return t
+
     def pad_cache(t):
         # write the prefilled K/V into slots [0, s); headroom slots stay 0.
         # The cache lives seq-sharded over the model axis (the decode
         # memory-term fix) regardless of how the per-layer k/v were laid
-        # out during the forward pass.
-        if state.cache_k.dtype == jnp.int8:
+        # out during the forward pass.  Already-int8 inputs (the per-block
+        # quantized mode quantizes before padding) must not re-quantize
+        # through the legacy fixed-scale path.
+        if state.cache_k.dtype == jnp.int8 and t.dtype != jnp.int8:
             t = A.quantize_kv(t)
-        tgt = state.cache_k.shape[2]
-        if t.shape[2] != tgt:
-            t = jnp.pad(t, ((0, 0), (0, 0), (0, tgt - t.shape[2]),
-                            (0, 0), (0, 0)))
-        return constrain(t, ("layers", "batch", "seq", "kv_heads", None))
+        return constrain(pad_seq(t),
+                         ("layers", "batch", "seq", "kv_heads", None))
 
     pos = (jnp.int32(s) if lengths is None else lengths.astype(jnp.int32))
     if cfg.family == "ssm":
         x, (xp, cp, wkv) = jax.lax.scan(body, x, params["blocks"])
-        state = state._replace(x_prev=xp, cm_prev=cp, wkv=wkv, pos=pos)
+        if qc:
+            wkv, wkv_s = quantize_blocked(wkv)
+            state = state._replace(x_prev=xp, cm_prev=cp, wkv=wkv,
+                                   wkv_scale=wkv_s, pos=pos)
+        else:
+            state = state._replace(x_prev=xp, cm_prev=cp, wkv=wkv, pos=pos)
     elif cfg.family == "hybrid":
         x, (ks, vs, tails, hs) = jax.lax.scan(body, x,
                                               (params["blocks"], windows))
-        state = state._replace(cache_k=pad_cache(ks), cache_v=pad_cache(vs),
-                               conv_tail=tails, ssm_h=hs, pos=pos)
+        if qc:
+            ks, ks_s = quantize_blocked(ks)
+            vs, vs_s = quantize_blocked(vs)
+            hs, hs_s = quantize_blocked(hs)
+            state = state._replace(cache_k=pad_cache(ks),
+                                   cache_v=pad_cache(vs),
+                                   scale_k=pad_seq(ks_s),
+                                   scale_v=pad_seq(vs_s),
+                                   conv_tail=tails, ssm_h=hs,
+                                   ssm_scale=hs_s, pos=pos)
+        else:
+            state = state._replace(cache_k=pad_cache(ks),
+                                   cache_v=pad_cache(vs),
+                                   conv_tail=tails, ssm_h=hs, pos=pos)
     else:
         x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], windows))
-        state = state._replace(cache_k=pad_cache(ks), cache_v=pad_cache(vs),
-                               pos=pos)
+        if qc:
+            ks, ks_s = quantize_blocked(ks)
+            vs, vs_s = quantize_blocked(vs)
+            state = state._replace(cache_k=pad_cache(ks),
+                                   cache_v=pad_cache(vs),
+                                   scale_k=pad_seq(ks_s),
+                                   scale_v=pad_seq(vs_s), pos=pos)
+        else:
+            state = state._replace(cache_k=pad_cache(ks),
+                                   cache_v=pad_cache(vs), pos=pos)
 
     if lengths is None:
         x_last = x[:, -1:, :]
@@ -595,7 +722,8 @@ def slot_update(state: DecodeState, sub: DecodeState, slots: Array
             src = jnp.broadcast_to(src.astype(tgt.dtype), slots.shape)
             out[name] = tgt.at[slots].set(src, mode="drop")
             continue
-        if name in ("cache_k", "cache_v") and src.shape[2] != tgt.shape[2]:
+        if name in ("cache_k", "cache_v", "scale_k", "scale_v") \
+                and src.shape[2] != tgt.shape[2]:
             grow = tgt.shape[2] - src.shape[2]
             if grow < 0:
                 raise ValueError(
@@ -616,6 +744,10 @@ def slot_update(state: DecodeState, sub: DecodeState, slots: Array
 # rejected write sits at a position > the committed ``pos`` and is invalid
 # by the age mask until the real token at that position overwrites it).
 REC_FIELDS = ("x_prev", "cm_prev", "wkv", "conv_tail", "ssm_h")
+
+# quantized-cache mode: the rec fields that live as int8 and the scale
+# field each one re-derives at spec_commit time
+_SCALE_FOR = {"wkv": "wkv_scale", "ssm_h": "ssm_scale"}
 
 
 def verify_step(params: Dict[str, Any], state: DecodeState,
@@ -668,9 +800,15 @@ def verify_step(params: Dict[str, Any], state: DecodeState,
     else:
         windows = jnp.asarray(layer_windows(cfg, 4096))
 
+    qc = _cache_quant(cfg)
+
     def body(x, xs):
         if cfg.family == "ssm":
-            bp, xp, cp, wkv = xs
+            if qc:
+                bp, xp, cp, wkv_q, wkv_s = xs
+                wkv = dequantize_blocked(wkv_q, wkv_s)
+            else:
+                bp, xp, cp, wkv = xs
             h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
             tm_out, (xp2, wkv2), wkv_steps = S.rwkv6_timemix(
                 h, S.Rwkv6Params(**bp["tm"]), cfg, pol, (xp, wkv),
@@ -681,25 +819,52 @@ def verify_step(params: Dict[str, Any], state: DecodeState,
                 h2, S.Rwkv6ChannelParams(**bp["cm"]), cfg, pol, cp)
             # token-shift checkpoints after step j+1 are the mixer inputs
             # themselves: h[:, j] / h2[:, j]
+            if qc:
+                # requantized placeholder keeps the returned pytree's
+                # dtypes stable; spec_commit overwrites it from the exact
+                # f32 checkpoints anyway
+                wkv2, wkv2_s = quantize_blocked(wkv2)
+                return x + cm_out, (h, h2, wkv_steps, xp2, cp2, wkv2,
+                                    wkv2_s)
             return x + cm_out, (h, h2, wkv_steps, xp2, cp2, wkv2)
 
-        bp, ck, cv, win = xs[0], xs[1], xs[2], xs[3]
-        extra = xs[4:]
+        bp, ck, cv = xs[0], xs[1], xs[2]
+        if qc:
+            sk_, sv_, win = xs[3], xs[4], xs[5]
+            extra = xs[6:]
+        else:
+            win = xs[3]
+            extra = xs[4:]
         h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
         q, k, v = A.qkv(h, _attn_params(bp, cfg), cfg, pol, positions)
-        ctx, ck2, cv2 = A.verify_attention(q, k, v, ck, cv, pos, cfg, pol,
-                                           win)
+        if qc:
+            ctx, ck2, cv2, sk2, sv2 = A.verify_attention(
+                q, k, v, ck, cv, pos, cfg, pol, win,
+                scale_k=sk_, scale_v=sv_)
+            new_caches = (ck2, cv2, sk2, sv2)
+        else:
+            ctx, ck2, cv2 = A.verify_attention(q, k, v, ck, cv, pos, cfg,
+                                               pol, win)
+            new_caches = (ck2, cv2)
         attn_out = L.dense(ctx.reshape(b, kq, -1), bp["attn"]["wo"], pol)
         new_extra = ()
         if cfg.family == "hybrid":
-            tail, hprev = extra
+            if qc:
+                tail, hq_, hs_ = extra
+                hprev = dequantize_blocked(hq_, hs_)
+            else:
+                tail, hprev = extra
             ssm_out, (tail2, h2), (tail_steps, h_steps) = S.mamba_mix(
                 h, S.MambaParams(**bp["mamba"]), cfg, pol, (tail, hprev),
                 return_states=True)
             attn_out = L.rms_norm(attn_out, bp["norm_attn"], cfg.norm_eps)
             ssm_out = L.rms_norm(ssm_out, bp["norm_ssm"], cfg.norm_eps)
             x = x + 0.5 * (attn_out + ssm_out)
-            new_extra = (tail2, h2, tail_steps, h_steps)
+            if qc:
+                h2, h2_s = quantize_blocked(h2)
+                new_extra = (tail2, h2, h2_s, tail_steps, h_steps)
+            else:
+                new_extra = (tail2, h2, tail_steps, h_steps)
         else:
             x = x + attn_out
         h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
@@ -714,7 +879,7 @@ def verify_step(params: Dict[str, Any], state: DecodeState,
         else:
             x = x + L.swiglu(h, bp["ffn"]["w_gate"], bp["ffn"]["w_up"],
                              bp["ffn"]["w_down"], pol, cfg.activation)
-        return x, (ck2, cv2) + new_extra
+        return x, new_caches + new_extra
 
     def stack(pre, steps):
         # steps (L, B, K, ...) stacked by the layer scan -> checkpoint
@@ -724,26 +889,57 @@ def verify_step(params: Dict[str, Any], state: DecodeState,
 
     rec_stack: Dict[str, Array] = {}
     if cfg.family == "ssm":
-        x, (xp_steps, cp_steps, wkv_steps, xp, cp, wkv) = jax.lax.scan(
-            body, x, (params["blocks"], state.x_prev, state.cm_prev,
-                      state.wkv))
-        new_state = state._replace(x_prev=xp, cm_prev=cp, wkv=wkv)
+        if qc:
+            x, (xp_steps, cp_steps, wkv_steps, xp, cp, wkv,
+                wkv_s) = jax.lax.scan(
+                body, x, (params["blocks"], state.x_prev, state.cm_prev,
+                          state.wkv, state.wkv_scale))
+            new_state = state._replace(x_prev=xp, cm_prev=cp, wkv=wkv,
+                                       wkv_scale=wkv_s)
+            wkv_pre = dequantize_blocked(state.wkv, state.wkv_scale)
+        else:
+            x, (xp_steps, cp_steps, wkv_steps, xp, cp, wkv) = jax.lax.scan(
+                body, x, (params["blocks"], state.x_prev, state.cm_prev,
+                          state.wkv))
+            new_state = state._replace(x_prev=xp, cm_prev=cp, wkv=wkv)
+            wkv_pre = state.wkv
+        # checkpoints stay exact f32: quantization (if any) happens only
+        # at spec_commit, on the state actually committed
         rec_stack = {"x_prev": stack(state.x_prev, xp_steps),
                      "cm_prev": stack(state.cm_prev, cp_steps),
-                     "wkv": stack(state.wkv, wkv_steps)}
+                     "wkv": stack(wkv_pre, wkv_steps)}
     elif cfg.family == "hybrid":
-        x, (ck, cv, tail, hh, tail_steps, h_steps) = jax.lax.scan(
-            body, x, (params["blocks"], state.cache_k, state.cache_v,
-                      windows, state.conv_tail, state.ssm_h))
-        new_state = state._replace(cache_k=ck, cache_v=cv, conv_tail=tail,
-                                   ssm_h=hh)
+        if qc:
+            x, (ck, cv, sk, sv, tail, hh, hh_s, tail_steps,
+                h_steps) = jax.lax.scan(
+                body, x, (params["blocks"], state.cache_k, state.cache_v,
+                          state.scale_k, state.scale_v, windows,
+                          state.conv_tail, state.ssm_h, state.ssm_scale))
+            new_state = state._replace(cache_k=ck, cache_v=cv, scale_k=sk,
+                                       scale_v=sv, conv_tail=tail, ssm_h=hh,
+                                       ssm_scale=hh_s)
+            h_pre = dequantize_blocked(state.ssm_h, state.ssm_scale)
+        else:
+            x, (ck, cv, tail, hh, tail_steps, h_steps) = jax.lax.scan(
+                body, x, (params["blocks"], state.cache_k, state.cache_v,
+                          windows, state.conv_tail, state.ssm_h))
+            new_state = state._replace(cache_k=ck, cache_v=cv,
+                                       conv_tail=tail, ssm_h=hh)
+            h_pre = state.ssm_h
         rec_stack = {"conv_tail": stack(state.conv_tail, tail_steps),
-                     "ssm_h": stack(state.ssm_h, h_steps)}
+                     "ssm_h": stack(h_pre, h_steps)}
     else:
-        x, (ck, cv) = jax.lax.scan(
-            body, x, (params["blocks"], state.cache_k, state.cache_v,
-                      windows))
-        new_state = state._replace(cache_k=ck, cache_v=cv)
+        if qc:
+            x, (ck, cv, sk, sv) = jax.lax.scan(
+                body, x, (params["blocks"], state.cache_k, state.cache_v,
+                          state.scale_k, state.scale_v, windows))
+            new_state = state._replace(cache_k=ck, cache_v=cv, scale_k=sk,
+                                       scale_v=sv)
+        else:
+            x, (ck, cv) = jax.lax.scan(
+                body, x, (params["blocks"], state.cache_k, state.cache_v,
+                          windows))
+            new_state = state._replace(cache_k=ck, cache_v=cv)
 
     x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
     logits = L.dense(x, params["lm_head"], pol)
@@ -799,9 +995,16 @@ def spec_commit(state: DecodeState, rec_stack: Dict[str, Array],
     out: Dict[str, Any] = {"pos": state.pos + advance.astype(state.pos.dtype)}
     for name, stack in rec_stack.items():         # stack (K+1, L, B, ...)
         if jnp.ndim(advance) == 0:
-            out[name] = stack[advance]
+            picked = stack[advance]
         else:
-            # out[l, b] = stack[advance[b], l, b]
-            out[name] = jax.vmap(lambda s, a: s[a], in_axes=(2, 0),
-                                 out_axes=1)(stack, advance)
+            # picked[l, b] = stack[advance[b], l, b]
+            picked = jax.vmap(lambda s, a: s[a], in_axes=(2, 0),
+                              out_axes=1)(stack, advance)
+        cur = getattr(state, name)
+        if cur is not None and cur.dtype == jnp.int8:
+            # quantize-on-commit: checkpoints are exact f32, the committed
+            # int8 state is quantized exactly once per accepted prefix
+            out[name], out[_SCALE_FOR[name]] = quantize_blocked(picked)
+        else:
+            out[name] = picked
     return state._replace(**out)

@@ -98,7 +98,14 @@ class ServeEngine:
     def __init__(self, model: Model, params, max_batch: int = 8,
                  max_seq: int = 256, greedy: bool = True,
                  min_bucket: int = 16, spec_k: int = 0,
-                 drafter: Optional[Drafter] = None):
+                 drafter: Optional[Drafter] = None,
+                 cache_dtype: Optional[str] = None):
+        # cache_dtype="int8" swaps the slot caches to the per-block-scaled
+        # quantized format (core/quant_cache.py): scale leaves are ordinary
+        # pytree leaves of the slot state, so bucketing/trace discipline is
+        # untouched — same trace counts, ~4x smaller K/V + wkv/ssm state.
+        if cache_dtype is not None:
+            model = model.with_cache_dtype(cache_dtype)
         self.model = model
         self.params = params
         self.max_batch = max_batch

@@ -284,6 +284,87 @@ def test_spec_validation(served):
         frames_model.verify_step(None, None, {"frames": None})
 
 
+# ---------------------------------------------------------------------------
+# Fallback paths: ring-cache refusal, no-draft plain fallback, rejection
+# sampling distribution
+# ---------------------------------------------------------------------------
+
+class _EmptySession(DraftSession):
+    def extend(self, tokens):
+        pass
+
+    def draft(self, k):
+        return []
+
+
+class _EmptyDrafter(Drafter):
+    """A drafter that never proposes — every step must take the plain
+    single-token program, not a degenerate (B, k+1) verify."""
+
+    def begin(self, context):
+        return _EmptySession()
+
+
+def test_ring_cache_spec_refusal(served):
+    """Long-context sliding-window decode stores a ring K/V cache whose
+    seq axis is shorter than max_seq; verify_step's masked scatter would
+    be silently wrong there, so the engine must refuse spec_k up front
+    (abstract shape check — no 128k allocation happens)."""
+    cfg, model, params, _ = served("hymba-1.5b")
+    assert cfg.sliding_window and cfg.supports_long_context
+    with pytest.raises(ValueError, match="ring caches"):
+        ServeEngine(model, params, max_batch=2, max_seq=131072, spec_k=4)
+    # without speculation the same config is served (ring decode works)
+    ServeEngine(model, params, max_batch=2, max_seq=131072)
+
+
+def test_no_draft_fallback_zero_verify_dispatches(served):
+    """With a drafter that never proposes, the engine must ride the plain
+    decode program every step: zero verify/commit dispatches, outputs
+    still bit-exact."""
+    cfg, model, params, dec = served("glm4-9b")
+    engine = ServeEngine(model, params, max_batch=2, max_seq=MAX_SEQ,
+                         spec_k=4, drafter=_EmptyDrafter())
+    reqs = _mixed_requests(cfg, lens=[5, 9], max_news=[6, 8], seed=4)
+    done = engine.serve(reqs)
+    assert engine.trace_counts["verify"] == 0
+    assert engine.trace_counts["commit"] == 0
+    assert engine.trace_counts["decode"] == 1
+    assert engine.metrics["draft_tokens"] == 0
+    for r in done:
+        ref = _single_stream(model, params, dec, r.prompt, r.max_new_tokens)
+        assert list(r.output) == ref
+
+
+def test_rejection_sampling_matches_plain_distribution(served):
+    """The spec acceptance rule must leave the emitted-token marginal
+    exactly the plain sampling distribution p: accept the (deterministic)
+    draft with probability p[d], else sample the residual.  Empirical
+    check on the first emitted token against ``_dist``."""
+    import types
+
+    cfg, model, params, _ = served("glm4-9b")
+    engine = ServeEngine(model, params, max_batch=2, max_seq=MAX_SEQ,
+                         greedy=False, spec_k=4)
+    req = Request(0, np.zeros(1, np.int32), max_new_tokens=1)
+    req.temperature = 0.9
+    req.top_k = 6
+    rng = np.random.default_rng(11)
+    slot = types.SimpleNamespace(req=req, rng=rng)
+    v = 8
+    rows = np.asarray(np.random.default_rng(0).normal(0, 1.5, (2, v)),
+                      np.float32)
+    p = engine._dist(slot, rows[0])
+    draft = int(np.argsort(p)[-2])          # a plausible but not top draft
+    n = 4000
+    counts = np.zeros(v)
+    for _ in range(n):
+        out = engine._accept_sampled(slot, rows, [draft], cap=1)
+        counts[out[0]] += 1
+    tvd = 0.5 * np.abs(counts / n - p).sum()
+    assert tvd < 0.05, (tvd, counts / n, p)
+
+
 def test_sampling_rejection_fallback_deterministic(served):
     """Temperature slots take the two-phase rejection-sampling path:
     seeded runs reproduce, and temp-0 slots in the same batch stay
