@@ -42,7 +42,7 @@ from repro.configs import get_arch
 from repro.core.pareto import error_metrics
 from repro.kernels import tuning
 from repro.models.model_zoo import build_model
-from repro.runtime.serve_loop import ServeEngine
+from repro.runtime.serve_loop import ServeConfig, ServeEngine
 
 ARCHS = ("glm4-9b", "rwkv6-3b", "hymba-1.5b")
 
@@ -113,11 +113,12 @@ def _arch_cell(arch: str, smoke: bool, max_batch: int, max_seq: int,
 
     # throughput: same arrival trace through fp and int8 engines
     n = 12 if smoke else 32
-    eng_fp = ServeEngine(model_fp, params, max_batch=max_batch,
-                         max_seq=max_seq)
+    eng_fp = ServeEngine(model_fp, params,
+                         ServeConfig(max_batch=max_batch, max_seq=max_seq))
     fp_stats = _replay(eng_fp, make_trace(cfg, n, seed=seed))
-    eng_q = ServeEngine(model_fp, params, max_batch=max_batch,
-                        max_seq=max_seq, cache_dtype="int8")
+    eng_q = ServeEngine(model_fp, params,
+                        ServeConfig(max_batch=max_batch, max_seq=max_seq,
+                                    cache_dtype="int8"))
     q_stats = _replay(eng_q, make_trace(cfg, n, seed=seed))
     cell.update({
         "fp": fp_stats,

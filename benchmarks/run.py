@@ -26,6 +26,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
                   max logit error, trace replay tok/s; writes
                   ``BENCH_quant.json``.  Full sweep:
                   ``python -m benchmarks.quant_bench``.
+  * paged_*     - paged slot memory + radix prefix cache vs the dense
+                  layout on a shared-prefix trace (smoke); writes
+                  ``BENCH_paged.json`` and fails on greedy divergence.
+                  Full replay: ``python -m benchmarks.serve_bench
+                  --paged``.
 """
 from __future__ import annotations
 
@@ -35,7 +40,7 @@ import traceback
 
 
 SUITE_NAMES = ("pareto", "mac", "caesar", "accuracy", "roofline", "tune",
-               "grads", "serve", "spec", "quant")
+               "grads", "serve", "spec", "quant", "paged")
 
 
 def main(argv=None):
@@ -59,6 +64,7 @@ def main(argv=None):
         "serve": serve_bench.run,
         "spec": serve_bench.run_spec,
         "quant": quant_bench.run,
+        "paged": serve_bench.run_paged,
     }
     only = args.only or args.suite
     if only:

@@ -32,7 +32,19 @@ compile time.  The CI ``serve-smoke`` lane gates on this file: greedy
 outputs must match and acceptance must not fall below the committed
 ``benchmarks/spec_baseline.json`` floor.
 
-Also registered as the ``serve`` and ``spec`` suites of
+**Paged prefix caching** (``--paged`` / the ``paged`` suite): replays a
+*shared-prefix* trace — a few long "system prompts" each carrying many
+short unique tails, the multi-turn/agentic workload prefix caching
+targets — through a dense continuous engine and a paged one
+(``CacheSpec(paged=True)`` + radix prefix cache), asserts the greedy
+outputs are **bit-identical**, and writes ``BENCH_paged.json`` with both
+engines' prefill token counts, the prefix-cache hit tokens, and the
+**prefill amortization** ``dense_prefill / paged_prefill`` (how much
+prompt compute the radix cache removed).  The CI ``serve-smoke`` lane
+gates on this file: outputs must match and amortization must not fall
+below the committed ``benchmarks/paged_baseline.json`` floor.
+
+Also registered as the ``serve``, ``spec`` and ``paged`` suites of
 ``benchmarks/run.py``.
 """
 from __future__ import annotations
@@ -46,10 +58,11 @@ import numpy as np
 
 import jax
 
-from repro.configs import get_arch
+from repro.configs import CacheSpec, get_arch
 from repro.kernels import tuning
 from repro.models.model_zoo import build_model
-from repro.runtime.serve_loop import GangServeEngine, Request, ServeEngine
+from repro.runtime.serve_loop import (GangServeEngine, Request, ServeConfig,
+                                      ServeEngine)
 
 
 def make_trace(cfg, n_requests: int, seed: int = 0, rate_hz: float = 50.0,
@@ -93,6 +106,33 @@ def make_spec_trace(cfg, n_requests: int, seed: int = 0,
         m = int(rng.integers(*motif_range))
         motif = rng.integers(0, cfg.vocab_size, m)
         prompt = np.tile(motif, n // m + 1)[:n].astype(np.int32)
+        reqs.append(Request(i, prompt, arrival_s=t,
+                            max_new_tokens=int(rng.choice(max_new_choices))))
+    return reqs
+
+
+def make_prefix_trace(cfg, n_requests: int, seed: int = 0,
+                      rate_hz: float = 200.0, n_prefixes: int = 2,
+                      prefix_len: int = 24, tail_range=(4, 11),
+                      max_new_choices=(2, 4, 8)) -> List[Request]:
+    """Shared-prefix arrival trace: few long system prompts, many tails.
+
+    Every request is one of ``n_prefixes`` fixed ``prefix_len``-token
+    prefixes plus a short unique tail — the multi-turn / agentic
+    workload where a radix prefix cache amortizes prompt prefill across
+    requests (the first request per prefix pays it, the rest reference
+    the cached pages).
+    """
+    rng = np.random.default_rng(seed)
+    prefixes = [rng.integers(0, cfg.vocab_size, prefix_len)
+                for _ in range(n_prefixes)]
+    t = 0.0
+    reqs = []
+    for i in range(n_requests):
+        t += float(rng.exponential(1.0 / rate_hz))
+        tail = rng.integers(0, cfg.vocab_size, int(rng.integers(*tail_range)))
+        prompt = np.concatenate([prefixes[i % n_prefixes],
+                                 tail]).astype(np.int32)
         reqs.append(Request(i, prompt, arrival_s=t,
                             max_new_tokens=int(rng.choice(max_new_choices))))
     return reqs
@@ -148,7 +188,8 @@ def sweep(smoke: bool = False, out_path: Optional[str] = None,
                            max_seq=max_seq)
     gang_stats = _replay(gang, make_trace(cfg, n, seed=seed))
 
-    cont = ServeEngine(model, params, max_batch=max_batch, max_seq=max_seq)
+    cont = ServeEngine(model, params, ServeConfig(max_batch=max_batch,
+                                                  max_seq=max_seq))
     cont_stats = _replay(cont, make_trace(cfg, n, seed=seed))
 
     report = {
@@ -198,8 +239,8 @@ def sweep_spec(smoke: bool = False, out_path: Optional[str] = None,
     n = n_requests if n_requests is not None else (48 if smoke else 96)
 
     def build(k):
-        eng = ServeEngine(model, params, max_batch=max_batch,
-                          max_seq=max_seq, spec_k=k)
+        eng = ServeEngine(model, params, ServeConfig(
+            max_batch=max_batch, max_seq=max_seq, spec_k=k))
         # steady-state comparison: compiles and the tuned-table boot are
         # paid on a small side trace, then the measured trace replays
         # against warm programs (the plain-vs-gang bench measures the
@@ -250,6 +291,70 @@ def sweep_spec(smoke: bool = False, out_path: Optional[str] = None,
     return report
 
 
+def sweep_paged(smoke: bool = False, out_path: Optional[str] = None,
+                arch: str = "glm4-9b", n_requests: Optional[int] = None,
+                max_batch: int = 4, max_seq: int = 64, page_size: int = 8,
+                seed: int = 0) -> Dict[str, Any]:
+    """Paged-vs-dense comparison on the shared-prefix trace (module doc).
+
+    The headline number is **prefill amortization**: prompt tokens the
+    dense engine prefilled divided by the tokens the paged engine
+    actually computed (its radix cache serves the rest from shared
+    pages).  Greedy outputs must stay bit-identical — prefix reuse is a
+    pure scheduling/memory change, never a numerics change.  Block-pool
+    telemetry (peak blocks vs the dense layout's fixed page equivalent)
+    shows resident cache memory scaling with live tokens.
+    """
+    cfg = get_arch(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    n = n_requests if n_requests is not None else (32 if smoke else 64)
+
+    # fresh Request objects per engine (engines mutate timing/output
+    # fields); same seed -> identical prompts, so outputs are comparable
+    dense = ServeEngine(model, params, ServeConfig(max_batch=max_batch,
+                                                   max_seq=max_seq))
+    dense_reqs = make_prefix_trace(cfg, n, seed=seed)
+    dense_stats = _replay(dense, dense_reqs)
+
+    paged = ServeEngine(model, params, ServeConfig(
+        max_batch=max_batch, max_seq=max_seq,
+        cache=CacheSpec(paged=True, page_size=page_size)))
+    paged_reqs = make_prefix_trace(cfg, n, seed=seed)
+    paged_stats = _replay(paged, paged_reqs)
+
+    # bit-equality: prefix reuse must not change a single token
+    by_rid = {r.rid: r.output for r in dense_reqs}
+    greedy_match = all(np.array_equal(r.output, by_rid[r.rid])
+                       for r in paged_reqs)
+
+    paged_prefill = int(paged.metrics["prefill_tokens"])
+    dense_prefill = int(dense.metrics["prefill_tokens"])
+    report = {
+        "meta": {**tuning.version_stamp(), "smoke": smoke, "arch": arch,
+                 "max_batch": max_batch, "max_seq": max_seq,
+                 "page_size": page_size, "n_requests": n, "seed": seed,
+                 "trace": "shared-prefix"},
+        "dense": dense_stats,
+        "paged": paged_stats,
+        "dense_prefill_tokens": dense_prefill,
+        "paged_prefill_tokens": paged_prefill,
+        "prefix_hit_tokens": int(paged.metrics["prefix_hit_tokens"]),
+        "prefill_amortization": round(
+            dense_prefill / max(paged_prefill, 1), 3),
+        "peak_blocks": int(paged.metrics["peak_blocks"]),
+        "dense_equiv_blocks": max_batch * (max_seq // page_size),
+        "extend_traces": int(paged.trace_counts["extend"]),
+        "reset_traces": int(paged.trace_counts["reset"]),
+        "decode_traces": int(paged.trace_counts["decode"]),
+        "greedy_match": bool(greedy_match),
+    }
+    if out_path:
+        with open(out_path, "w", encoding="utf-8") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+    return report
+
+
 def run(csv_rows):
     """`benchmarks.run` suite entry: smoke trace, writes BENCH_serving.json."""
     report = sweep(smoke=True, out_path="BENCH_serving.json")
@@ -286,6 +391,27 @@ def run_spec(csv_rows):
             "speculative greedy outputs diverged from plain decode")
 
 
+def run_paged(csv_rows):
+    """`benchmarks.run` paged suite: smoke trace, writes BENCH_paged.json."""
+    report = sweep_paged(smoke=True, out_path="BENCH_paged.json")
+    for name in ("dense", "paged"):
+        s = report[name]
+        us = 1e6 * s["wall_s"] / max(s["delivered_tokens"], 1)
+        csv_rows.append((
+            f"paged_{name}_{report['meta']['arch']}", us,
+            f"tok_s={s['tok_s']};dropped={s['dropped']}"))
+    csv_rows.append((
+        "paged_prefill_amortization", 0.0,
+        f"dense_over_paged={report['prefill_amortization']};"
+        f"prefix_hits={report['prefix_hit_tokens']};"
+        f"peak_blocks={report['peak_blocks']}/"
+        f"{report['dense_equiv_blocks']};"
+        f"greedy_match={report['greedy_match']}"))
+    if not report["greedy_match"]:
+        raise AssertionError(
+            "paged prefix-cached outputs diverged from dense decode")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="Continuous-batching vs gang-scheduler serving "
@@ -304,13 +430,43 @@ def main(argv=None) -> int:
                          "draftable trace (writes BENCH_spec.json)")
     ap.add_argument("--spec-k", type=int, default=5,
                     help="drafted tokens per slot per step (--spec)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged-vs-dense comparison on the shared-prefix "
+                         "trace (writes BENCH_paged.json)")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="tokens per cache page (--paged)")
     ap.add_argument("--out", default=None,
                     help="report path ('' to skip); defaults to "
-                         "BENCH_serving.json / BENCH_spec.json")
+                         "BENCH_serving.json / BENCH_spec.json / "
+                         "BENCH_paged.json")
     args = ap.parse_args(argv)
+    if args.spec and args.paged:
+        ap.error("pick one of --spec / --paged")
     out = args.out
     if out is None:
-        out = "BENCH_spec.json" if args.spec else "BENCH_serving.json"
+        out = ("BENCH_spec.json" if args.spec
+               else "BENCH_paged.json" if args.paged
+               else "BENCH_serving.json")
+
+    if args.paged:
+        report = sweep_paged(smoke=args.smoke, out_path=out or None,
+                             arch=args.arch, n_requests=args.requests,
+                             max_batch=args.max_batch,
+                             max_seq=args.max_seq,
+                             page_size=args.page_size, seed=args.seed)
+        print("engine,tok_s,prefill_tokens,dropped")
+        for name in ("dense", "paged"):
+            s = report[name]
+            print(f"{name},{s['tok_s']},"
+                  f"{report[f'{name}_prefill_tokens']},{s['dropped']}")
+        print(f"# prefill amortization (dense/paged): "
+              f"{report['prefill_amortization']}x; prefix hits "
+              f"{report['prefix_hit_tokens']} tok; peak blocks "
+              f"{report['peak_blocks']}/{report['dense_equiv_blocks']}; "
+              f"greedy_match {report['greedy_match']}")
+        ok = (report["greedy_match"] and report["dense"]["dropped"] == 0
+              and report["paged"]["dropped"] == 0)
+        return 0 if ok else 1
 
     if args.spec:
         report = sweep_spec(smoke=args.smoke, out_path=out or None,

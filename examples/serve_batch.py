@@ -22,10 +22,12 @@ sys.path.insert(0, str(_ROOT))  # benchmarks package (shared make_trace)
 import jax
 import numpy as np
 
-from benchmarks.serve_bench import make_spec_trace, make_trace
-from repro.configs import get_arch
+from benchmarks.serve_bench import (make_prefix_trace, make_spec_trace,
+                                    make_trace)
+from repro.configs import CacheSpec, get_arch
 from repro.models.model_zoo import build_model
-from repro.runtime.serve_loop import GangServeEngine, ServeEngine
+from repro.runtime.serve_loop import (GangServeEngine, ServeConfig,
+                                      ServeEngine)
 
 
 def main():
@@ -39,9 +41,14 @@ def main():
     ap.add_argument("--spec", type=int, default=0, metavar="K",
                     help="speculative decoding: draft K tokens per slot "
                          "per step (n-gram drafter)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged slot memory + radix prefix cache; replays "
+                         "the shared-prefix trace where prefix reuse pays")
     args = ap.parse_args()
     if args.spec and args.gang:
         ap.error("--spec needs the continuous engine (drop --gang)")
+    if args.paged and args.gang:
+        ap.error("--paged needs the continuous engine (drop --gang)")
 
     cfg = get_arch(args.arch).reduced()
     model = build_model(cfg)
@@ -53,11 +60,15 @@ def main():
         engine = GangServeEngine(model, params, max_batch=args.max_batch,
                                  max_seq=max_seq)
     else:
-        engine = ServeEngine(model, params, max_batch=args.max_batch,
-                             max_seq=max_seq, spec_k=args.spec)
+        engine = ServeEngine(model, params, ServeConfig(
+            max_batch=args.max_batch, max_seq=max_seq, spec_k=args.spec,
+            cache=CacheSpec(paged=True, page_size=8) if args.paged
+            else None))
     # spec mode replays the draftable motif trace — the workload where
-    # prompt-lookup drafting earns its verify width
+    # prompt-lookup drafting earns its verify width; paged mode the
+    # shared-prefix trace where the radix cache earns its pages
     reqs = (make_spec_trace(cfg, args.requests) if args.spec
+            else make_prefix_trace(cfg, args.requests) if args.paged
             else make_trace(cfg, args.requests))
     t0 = time.time()
     done = engine.serve(reqs)
@@ -79,6 +90,11 @@ def main():
     if args.spec:
         print(f"  spec: acceptance {engine.metrics['spec_acceptance']:.0%},"
               f" {engine.metrics['tokens_per_step']:.2f} tokens/step")
+    if args.paged:
+        print(f"  paged: prefix hits "
+              f"{engine.metrics['prefix_hit_tokens']:.0f} tok "
+              f"(computed {engine.metrics['prefill_tokens']:.0f}), "
+              f"peak blocks {engine.metrics['peak_blocks']:.0f}")
 
 
 if __name__ == "__main__":

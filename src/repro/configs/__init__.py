@@ -1,4 +1,4 @@
-from repro.configs.base import (ArchConfig, ExecutionPolicy, ShapeConfig,
-                                LM_SHAPES, BF16_EXEC, CORDIC_EXEC,
-                                shape_applicable)  # noqa: F401
+from repro.configs.base import (ArchConfig, CacheSpec, ExecutionPolicy,
+                                ShapeConfig, LM_SHAPES, BF16_EXEC,
+                                CORDIC_EXEC, shape_applicable)  # noqa: F401
 from repro.configs.registry import ARCHS, get_arch  # noqa: F401

@@ -56,6 +56,62 @@ CORDIC_EXEC = ExecutionPolicy(matmul="fxp8", af=CordicPolicy(bits=16),
 
 
 @dataclasses.dataclass(frozen=True)
+class CacheSpec:
+    """The one description of a serving cache's storage format.
+
+    Replaces the two historical knobs that grew side by side —
+    ``ArchConfig.kv_cache_bits`` (the paper's fixed-scale Q3.4 FxP8 study)
+    and ``ArchConfig.cache_quant`` (the per-block-scaled int8 serving
+    mode) — with a single validated spec:
+
+      dtype:      "native" (the model compute dtype), "int8" (per-block
+                  f32 scales, :mod:`repro.core.quant_cache`) or "fxp8"
+                  (legacy fixed Q3.4 scale, ``attention.KV_Q_SCALE``).
+      block:      scale-block width in trailing channels for ``int8``
+                  (``None`` = one scale per written vector, the
+                  serving-safe default; must divide the trailing axis).
+      paged:      store slot K/V (and int8 scale leaves) in a shared
+                  fixed-size block pool addressed through per-slot block
+                  tables instead of a dense ``max_batch x max_seq``
+                  allocation (``models/paged.py``).
+      page_size:  tokens per pool page when ``paged``; int8 scales are
+                  grouped per page, so quantization granularity aligns
+                  with the paging granularity by construction.
+
+    Build one directly (``ArchConfig(..., cache=CacheSpec(dtype="int8"))``)
+    or let :meth:`ArchConfig.cache_spec` derive it from the legacy
+    fields.  Setting ``cache`` *and* a legacy knob is an error — there
+    must be exactly one spelling of the cache format in play.
+    """
+
+    dtype: str = "native"          # "native" | "int8" | "fxp8"
+    block: Optional[int] = None    # int8 scale-block width (None = vector)
+    paged: bool = False
+    page_size: int = 16
+
+    def __post_init__(self):
+        if self.dtype not in ("native", "int8", "fxp8"):
+            raise ValueError(
+                f"CacheSpec.dtype must be 'native', 'int8' or 'fxp8', "
+                f"got {self.dtype!r}")
+        if self.block is not None and self.block < 1:
+            raise ValueError(f"CacheSpec.block must be >= 1, got "
+                             f"{self.block}")
+        if self.paged and self.page_size < 1:
+            raise ValueError(f"CacheSpec.page_size must be >= 1, got "
+                             f"{self.page_size}")
+        if self.paged and self.dtype == "fxp8":
+            raise ValueError("paged caches support 'native' and 'int8' "
+                             "storage; the legacy fixed-scale 'fxp8' "
+                             "format is a single-stream study, not a "
+                             "serving format")
+
+    @property
+    def quantized(self) -> bool:
+        return self.dtype == "int8"
+
+
+@dataclasses.dataclass(frozen=True)
 class ArchConfig:
     """One architecture from the assigned pool."""
 
@@ -93,10 +149,13 @@ class ArchConfig:
     # attention implementation: "auto" | "naive" | "chunked"
     attn_impl: str = "auto"
     attn_chunk: int = 1024
-    kv_cache_bits: int = 16        # 8 => FxP8 (Q3.4) quantized KV cache
-    cache_quant: str = "none"      # "int8" => per-block-scaled serving
-                                   # caches (core/quant_cache.py); distinct
-                                   # from the fixed-scale kv_cache_bits=8
+    # Serving-cache storage format.  `cache` (a CacheSpec) is the one
+    # spelling going forward; `kv_cache_bits` / `cache_quant` are the two
+    # legacy knobs it unifies, kept so existing configs keep loading —
+    # setting a legacy knob *and* `cache` raises in `cache_spec()`.
+    cache: Optional["CacheSpec"] = None
+    kv_cache_bits: int = 16        # LEGACY: 8 => FxP8 (Q3.4) KV cache
+    cache_quant: str = "none"      # LEGACY: "int8" => per-block scales
     fuse_moe_ffn_ar: bool = False  # fuse dense-residual FFN into the MoE
                                    # psum (one AR per layer instead of two)
     remat: bool = True
@@ -105,6 +164,45 @@ class ArchConfig:
     @property
     def head_dim_(self) -> int:
         return self.head_dim or self.d_model // self.n_heads
+
+    def cache_spec(self) -> "CacheSpec":
+        """The resolved serving-cache format (one source of truth).
+
+        ``cache`` wins when set; otherwise the legacy knobs are
+        translated.  Mixing the spellings — a ``CacheSpec`` *and* a
+        non-default ``kv_cache_bits``/``cache_quant`` — is an error, as
+        is combining the two legacy quantized formats.
+        """
+        legacy = []
+        if self.kv_cache_bits == 8:
+            legacy.append("kv_cache_bits=8")
+        elif self.kv_cache_bits != 16:
+            raise ValueError(f"kv_cache_bits must be 8 or 16, got "
+                             f"{self.kv_cache_bits}")
+        if self.cache_quant == "int8":
+            legacy.append("cache_quant='int8'")
+        elif self.cache_quant != "none":
+            raise ValueError(f"unknown cache_quant {self.cache_quant!r}; "
+                             f"expected 'none' or 'int8'")
+        if self.cache is not None:
+            if legacy:
+                raise ValueError(
+                    f"ArchConfig.cache={self.cache} conflicts with the "
+                    f"legacy spelling {' + '.join(legacy)}: the cache "
+                    f"format has exactly one spelling — drop the legacy "
+                    f"knob and put the format in CacheSpec")
+            return self.cache
+        if len(legacy) == 2:
+            raise ValueError(
+                "cache_quant='int8' (per-block scales) and "
+                "kv_cache_bits=8 (fixed Q3.4 scale) are mutually "
+                "exclusive KV-cache formats; use "
+                "cache=CacheSpec(dtype=...) to pick one")
+        if self.cache_quant == "int8":
+            return CacheSpec(dtype="int8")
+        if self.kv_cache_bits == 8:
+            return CacheSpec(dtype="fxp8")
+        return CacheSpec()
 
     @property
     def supports_long_context(self) -> bool:

@@ -11,9 +11,10 @@ import time
 import jax
 import numpy as np
 
-from repro.configs import CORDIC_EXEC, get_arch
+from repro.configs import CORDIC_EXEC, CacheSpec, get_arch
 from repro.models.model_zoo import build_model
-from repro.runtime.serve_loop import GangServeEngine, Request, ServeEngine
+from repro.runtime.serve_loop import (GangServeEngine, Request, ServeConfig,
+                                      ServeEngine)
 
 
 def main(argv=None):
@@ -31,9 +32,17 @@ def main(argv=None):
                     help="speculative decoding: draft K tokens per slot "
                          "per step (n-gram drafter; greedy outputs stay "
                          "bit-identical to plain decode)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged slot memory + radix prefix cache: K/V "
+                         "lives in a shared block pool, shared-prefix "
+                         "admissions reuse already-prefilled pages")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per cache page (--paged)")
     args = ap.parse_args(argv)
     if args.spec and args.gang:
         ap.error("--spec needs the continuous engine (drop --gang)")
+    if args.paged and args.gang:
+        ap.error("--paged needs the continuous engine (drop --gang)")
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -44,8 +53,11 @@ def main(argv=None):
         engine = GangServeEngine(model, params, max_batch=args.max_batch,
                                  max_seq=args.max_seq)
     else:
-        engine = ServeEngine(model, params, max_batch=args.max_batch,
-                             max_seq=args.max_seq, spec_k=args.spec)
+        cache = (CacheSpec(paged=True, page_size=args.page_size)
+                 if args.paged else None)
+        engine = ServeEngine(model, params, ServeConfig(
+            max_batch=args.max_batch, max_seq=args.max_seq,
+            spec_k=args.spec, cache=cache))
     rng = np.random.default_rng(args.seed)
     reqs = []
     for i in range(args.requests):
@@ -69,6 +81,10 @@ def main(argv=None):
     if not args.gang:
         print(f"# queue wait {engine.metrics['queue_wait_s'] * 1e3:.0f}ms, "
               f"slot occupancy {engine.metrics['slot_occupancy']:.0%}")
+    if args.paged:
+        print(f"# paged: prefix hits "
+              f"{engine.metrics['prefix_hit_tokens']:.0f} tok, peak "
+              f"blocks {engine.metrics['peak_blocks']:.0f}")
     if args.spec:
         print(f"# spec: acceptance "
               f"{engine.metrics['spec_acceptance']:.0%}, "

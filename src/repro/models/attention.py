@@ -166,6 +166,74 @@ def attention(q, k, v, cfg: ArchConfig, pol: ExecutionPolicy, q_pos, k_pos,
 # Decode (single-token) with a preallocated cache
 # ---------------------------------------------------------------------------
 
+def _attend_decode(q: Array, keys: Array, vals: Array, pos: Array,
+                   pol: ExecutionPolicy, window) -> Array:
+    """Single-token attend over a (B,S,Hkv,dh) key/value view.
+
+    The mask/softmax/einsum half of :func:`decode_attention`, shared by
+    the dense and paged layouts: both present the same logical
+    (B, S, Hkv, dh) view, so the math (and its bit pattern) is layout-
+    independent.
+    """
+    b, _, hq, dh = q.shape
+    s_max = keys.shape[1]
+    hkv = keys.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, 1, hkv, g, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, keys) / jnp.sqrt(float(dh))
+    # ring-buffer positions: slot t holds absolute position
+    #   p_t = t            if t <= pos (current wrap)  [no-wrap case]
+    # with wrapping, valid entries are the last min(pos+1, s_max) writes.
+    per_row = jnp.ndim(pos) == 1
+    t = jnp.arange(s_max)
+    age = jnp.mod((pos[:, None] if per_row else pos) - t, s_max)  # 0 = newest
+    valid = age < jnp.minimum((pos[:, None] if per_row else pos) + 1, s_max)
+    in_window = age < window
+    mask = jnp.logical_and(valid, in_window)
+    if per_row:                             # (B, S): own history per slot
+        mask = mask[:, None, None, None, :]
+    else:
+        mask = mask[None, None, None, None, :]
+    scores = jnp.where(mask, scores.astype(jnp.float32), NEG_INF)
+    probs = L.softmax(scores, pol).astype(q.dtype)
+    ctx = jnp.einsum("bkgst,btkd->bskgd", probs, vals)
+    return ctx.reshape(b, 1, hq, dh)
+
+
+def _attend_verify(q: Array, keys: Array, vals: Array, posv: Array,
+                   pol: ExecutionPolicy, window) -> Array:
+    """K-candidate attend over a (B,S,Hkv,dh) view (see verify_attention).
+
+    Shared mask/softmax/einsum half of the verify pass; per-query
+    numerics are exactly :func:`_attend_decode` at that position, for
+    both the dense and paged layouts.
+    """
+    b, kq, hq, dh = q.shape
+    s_max = keys.shape[1]
+    hkv = keys.shape[2]
+    g = hq // hkv
+    offs = jnp.arange(kq, dtype=posv.dtype)
+    wpos = posv[:, None] + offs[None, :]                  # (B,K) absolute
+    qg = q.reshape(b, kq, hkv, g, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, keys) / jnp.sqrt(float(dh))
+    t = jnp.arange(s_max)
+    age = jnp.mod(wpos[..., None] - t, s_max)             # (B,K,S); 0=self
+    valid = age < jnp.minimum(wpos[..., None] + 1, s_max)
+    in_window = age < window
+    # this call's candidate columns: slot t holds candidate j = d when
+    # d < K *and* that write landed (pos + d < s_max); query i must not
+    # see j > i
+    d = jnp.mod(t[None, None, :] - posv[:, None, None], s_max)
+    future = ((d > offs[None, :, None]) & (d < kq)
+              & (posv[:, None, None] + d < s_max))
+    mask = valid & in_window & ~future
+    mask = mask[:, None, None]                            # (B,1,1,K,S)
+    scores = jnp.where(mask, scores.astype(jnp.float32), NEG_INF)
+    probs = L.softmax(scores, pol).astype(q.dtype)
+    ctx = jnp.einsum("bkgst,btkd->bskgd", probs, vals)
+    return ctx.reshape(b, kq, hq, dh)
+
+
 def decode_attention(q: Array, k_new: Array, v_new: Array, cache_k: Array,
                      cache_v: Array, pos: Array, cfg: ArchConfig,
                      pol: ExecutionPolicy, window,
@@ -218,33 +286,14 @@ def decode_attention(q: Array, k_new: Array, v_new: Array, cache_k: Array,
                                                           slot, axis=1)
             scale_v = jax.lax.dynamic_update_slice_in_dim(scale_v, v_s,
                                                           slot, axis=1)
-    hkv = cache_k.shape[2]
-    g = hq // hkv
-    qg = q.reshape(b, 1, hkv, g, dh)
     keys = (dequantize_blocked(cache_k, scale_k, q.dtype) if blocked
             else dequantize_kv(cache_k, q.dtype))
-    scores = jnp.einsum("bskgd,btkd->bkgst", qg, keys) / jnp.sqrt(float(dh))
-    # ring-buffer positions: slot t holds absolute position
-    #   p_t = t            if t <= pos (current wrap)  [no-wrap case]
-    # with wrapping, valid entries are the last min(pos+1, s_max) writes.
-    t = jnp.arange(s_max)
-    age = jnp.mod((pos[:, None] if per_row else pos) - t, s_max)  # 0 = newest
-    valid = age < jnp.minimum((pos[:, None] if per_row else pos) + 1, s_max)
-    in_window = age < window
-    mask = jnp.logical_and(valid, in_window)
-    if per_row:                             # (B, S): own history per slot
-        mask = mask[:, None, None, None, :]
-    else:
-        mask = mask[None, None, None, None, :]
-    scores = jnp.where(mask, scores.astype(jnp.float32), NEG_INF)
-    probs = L.softmax(scores, pol).astype(q.dtype)
     vals = (dequantize_blocked(cache_v, scale_v, q.dtype) if blocked
             else dequantize_kv(cache_v, q.dtype))
-    ctx = jnp.einsum("bkgst,btkd->bskgd", probs, vals)
+    ctx = _attend_decode(q, keys, vals, pos, pol, window)
     if blocked:
-        return (ctx.reshape(b, 1, hq, dh), cache_k, cache_v,
-                scale_k, scale_v)
-    return ctx.reshape(b, 1, hq, dh), cache_k, cache_v
+        return ctx, cache_k, cache_v, scale_k, scale_v
+    return ctx, cache_k, cache_v
 
 
 def verify_attention(q: Array, k_new: Array, v_new: Array, cache_k: Array,
@@ -299,30 +348,137 @@ def verify_attention(q: Array, k_new: Array, v_new: Array, cache_k: Array,
     if blocked:
         scale_k = scale_k.at[rows, wpos].set(k_s, mode="drop")
         scale_v = scale_v.at[rows, wpos].set(v_s, mode="drop")
-    hkv = cache_k.shape[2]
-    g = hq // hkv
-    qg = q.reshape(b, kq, hkv, g, dh)
     keys = (dequantize_blocked(cache_k, scale_k, q.dtype) if blocked
             else dequantize_kv(cache_k, q.dtype))
-    scores = jnp.einsum("bskgd,btkd->bkgst", qg, keys) / jnp.sqrt(float(dh))
-    t = jnp.arange(s_max)
-    age = jnp.mod(wpos[..., None] - t, s_max)             # (B,K,S); 0=self
-    valid = age < jnp.minimum(wpos[..., None] + 1, s_max)
-    in_window = age < window
-    # this call's candidate columns: slot t holds candidate j = d when
-    # d < K *and* that write landed (pos + d < s_max); query i must not
-    # see j > i
-    d = jnp.mod(t[None, None, :] - posv[:, None, None], s_max)
-    future = ((d > offs[None, :, None]) & (d < kq)
-              & (posv[:, None, None] + d < s_max))
-    mask = valid & in_window & ~future
-    mask = mask[:, None, None]                            # (B,1,1,K,S)
-    scores = jnp.where(mask, scores.astype(jnp.float32), NEG_INF)
-    probs = L.softmax(scores, pol).astype(q.dtype)
     vals = (dequantize_blocked(cache_v, scale_v, q.dtype) if blocked
             else dequantize_kv(cache_v, q.dtype))
-    ctx = jnp.einsum("bkgst,btkd->bskgd", probs, vals)
+    ctx = _attend_verify(q, keys, vals, posv, pol, window)
     if blocked:
-        return (ctx.reshape(b, kq, hq, dh), cache_k, cache_v,
-                scale_k, scale_v)
-    return ctx.reshape(b, kq, hq, dh), cache_k, cache_v
+        return ctx, cache_k, cache_v, scale_k, scale_v
+    return ctx, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# Paged decode/verify: pooled cache addressed through per-slot block tables
+# ---------------------------------------------------------------------------
+# Pool layout (per layer): (N, page, Hkv, dh); a (B, P) int32 block table
+# maps logical page p of slot b to a pool block.  The sentinel value N
+# marks an unallocated page: gathers through it clamp (jax gather
+# semantics) into in-pool garbage the decode age mask already excludes,
+# and writes through it drop — so the jitted program never needs to know
+# which pages are live.  See models/paged.py for the invariants.
+
+def paged_gather(pool: Array, table: Array) -> Array:
+    """Logical (B, P*page, ...) view of a pooled cache via block tables."""
+    b, p = table.shape
+    g = pool[table]                              # (B, P, page, ...)
+    return g.reshape((b, p * pool.shape[1]) + pool.shape[2:])
+
+
+def _paged_write(pool: Array, idx: Array, new: Array) -> Array:
+    """Scatter rows into a pool through flat token indices (drop OOB)."""
+    n, page = pool.shape[:2]
+    flat = pool.reshape((n * page,) + pool.shape[2:])
+    flat = flat.at[idx].set(new, mode="drop")
+    return flat.reshape(pool.shape)
+
+
+def paged_decode_attention(q: Array, k_new: Array, v_new: Array,
+                           pool_k: Array, pool_v: Array, table: Array,
+                           pos: Array, cfg: ArchConfig,
+                           pol: ExecutionPolicy, window,
+                           scale_k: Optional[Array] = None,
+                           scale_v: Optional[Array] = None):
+    """:func:`decode_attention` over a pooled cache (see module note).
+
+    The new K/V vector lands at flat pool index ``table[b, pos//page] *
+    page + pos%page`` (drop through the sentinel / past logical
+    capacity — the paged cache is linear, never ring-wrapped), then the
+    pool is gathered back to the logical (B, S, Hkv, dh) view and the
+    shared :func:`_attend_decode` half runs unchanged — which is what
+    keeps paged decode bit-identical to the dense layout.
+    """
+    b = q.shape[0]
+    n, page = pool_k.shape[:2]
+    s_log = table.shape[1] * page
+    posv = pos if jnp.ndim(pos) == 1 else jnp.broadcast_to(pos, (b,))
+    blocked = scale_k is not None
+    if blocked:
+        k_w, k_s = quantize_blocked(k_new)
+        v_w, v_s = quantize_blocked(v_new)
+    else:
+        k_w = k_new.astype(pool_k.dtype)
+        v_w = v_new.astype(pool_v.dtype)
+    rows = jnp.arange(b)
+    blk = table[rows, jnp.minimum(posv // page, table.shape[1] - 1)]
+    idx = blk * page + jnp.mod(posv, page)
+    idx = jnp.where(posv < s_log, idx, n * page)          # linear: drop OOB
+    pool_k = _paged_write(pool_k, idx, k_w[:, 0])
+    pool_v = _paged_write(pool_v, idx, v_w[:, 0])
+    if blocked:
+        scale_k = _paged_write(scale_k, idx, k_s[:, 0])
+        scale_v = _paged_write(scale_v, idx, v_s[:, 0])
+        keys = dequantize_blocked(paged_gather(pool_k, table),
+                                  paged_gather(scale_k, table), q.dtype)
+        vals = dequantize_blocked(paged_gather(pool_v, table),
+                                  paged_gather(scale_v, table), q.dtype)
+    else:
+        keys = dequantize_kv(paged_gather(pool_k, table), q.dtype)
+        vals = dequantize_kv(paged_gather(pool_v, table), q.dtype)
+    ctx = _attend_decode(q, keys, vals, posv, pol, window)
+    if blocked:
+        return ctx, pool_k, pool_v, scale_k, scale_v
+    return ctx, pool_k, pool_v
+
+
+def paged_verify_attention(q: Array, k_new: Array, v_new: Array,
+                           pool_k: Array, pool_v: Array, table: Array,
+                           pos: Array, cfg: ArchConfig,
+                           pol: ExecutionPolicy, window,
+                           scale_k: Optional[Array] = None,
+                           scale_v: Optional[Array] = None):
+    """:func:`verify_attention` over a pooled cache.
+
+    All K candidate columns scatter through the block tables first
+    (sentinel/OOB writes drop — unallocated pages are never touched, so
+    speculative garbage can only ever land in a slot's private frontier
+    pages, never in radix-shared blocks), then the shared
+    :func:`_attend_verify` half runs on the gathered logical view.  This
+    is both the spec-decode verify pass and the admission extend pass
+    (positions ``pos .. pos+K-1`` scored in one shot; rows the host did
+    not admit simply have no pages allocated past their frontier and
+    roll back via ``spec_commit(advance=0)``).
+    """
+    b, kq = q.shape[:2]
+    n, page = pool_k.shape[:2]
+    s_log = table.shape[1] * page
+    posv = pos if jnp.ndim(pos) == 1 else jnp.broadcast_to(pos, (b,))
+    offs = jnp.arange(kq, dtype=posv.dtype)
+    wpos = posv[:, None] + offs[None, :]                  # (B,K) absolute
+    blocked = scale_k is not None
+    if blocked:
+        k_w, k_s = quantize_blocked(k_new)
+        v_w, v_s = quantize_blocked(v_new)
+    else:
+        k_w = k_new.astype(pool_k.dtype)
+        v_w = v_new.astype(pool_v.dtype)
+    rows = jnp.arange(b)[:, None]
+    blk = table[rows, jnp.minimum(wpos // page, table.shape[1] - 1)]
+    idx = blk * page + jnp.mod(wpos, page)
+    idx = jnp.where(wpos < s_log, idx, n * page)          # linear: drop OOB
+    pool_k = _paged_write(pool_k, idx, k_w)
+    pool_v = _paged_write(pool_v, idx, v_w)
+    if blocked:
+        scale_k = _paged_write(scale_k, idx, k_s)
+        scale_v = _paged_write(scale_v, idx, v_s)
+        keys = dequantize_blocked(paged_gather(pool_k, table),
+                                  paged_gather(scale_k, table), q.dtype)
+        vals = dequantize_blocked(paged_gather(pool_v, table),
+                                  paged_gather(scale_v, table), q.dtype)
+    else:
+        keys = dequantize_kv(paged_gather(pool_k, table), q.dtype)
+        vals = dequantize_kv(paged_gather(pool_v, table), q.dtype)
+    ctx = _attend_verify(q, keys, vals, posv, pol, window)
+    if blocked:
+        return ctx, pool_k, pool_v, scale_k, scale_v
+    return ctx, pool_k, pool_v

@@ -2,16 +2,127 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Protocol, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig, ExecutionPolicy
+from repro.configs.base import ArchConfig, CacheSpec, ExecutionPolicy
+from repro.models import paged as PG
 from repro.models import spec as pspec
 from repro.models import transformer as T
 
 Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# CacheOps: the slot-cache backend protocol (dense / paged)
+# ---------------------------------------------------------------------------
+
+class CacheOps(Protocol):
+    """The serving engine's slot-cache seam, as an explicit protocol.
+
+    A backend owns the *layout* of per-slot decode state and the three
+    operations the engine drives it through; the model's compute
+    functions (``decode_step``/``verify_step``) dispatch on the state
+    type they are handed, so swapping backends never touches the engine's
+    jitted programs beyond their (cached) input shapes.
+
+    ``init_slot_state(max_batch, max_seq, abstract=False)``
+        Allocate the persistent slot state (per-slot ``pos`` vector).
+
+    ``slot_update(state, sub, slots)``
+        Prefill-admission scatter: insert a bucketed group-prefill's
+        per-request state at slot indices (>= max_batch drops).  The
+        dense backend's admission path; the paged backend — whose
+        admissions *extend in place* through the block tables
+        (``slot_reset`` + ``Model.verify_step`` + ``spec_commit``) —
+        raises ``NotImplementedError`` here by design.
+
+    ``slot_reset(state, slots, pos_values, rec=None)``
+        Extend-admission reset: point admitted slots at their resume
+        position (0 cold, or a radix-cache prefix length) and load/zero
+        the recurrent fields.  Works on either layout.
+
+    ``spec_commit(state, rec_stack, advance)``
+        Commit a verify pass: advance per-row ``pos`` by the accepted
+        length and roll recurrent state back to its checkpoint.  Also the
+        second half of a paged admission (``advance = suffix lengths``).
+
+    ``paged`` / ``spec`` describe the backend for the engine's planning
+    (block accounting lives host-side in ``runtime/block_pool.py``).
+    """
+    paged: bool
+    spec: CacheSpec
+
+    def init_slot_state(self, max_batch: int, max_seq: int,
+                        abstract: bool = False): ...
+
+    def slot_update(self, state, sub, slots): ...
+
+    def slot_reset(self, state, slots, pos_values, rec=None): ...
+
+    def spec_commit(self, state, rec_stack, advance): ...
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseCacheOps:
+    """Per-slot ``max_seq``-long caches (the classic layout)."""
+    cfg: ArchConfig
+    paged: bool = False
+
+    @property
+    def spec(self) -> CacheSpec:
+        return self.cfg.cache_spec()
+
+    def init_slot_state(self, max_batch: int, max_seq: int,
+                        abstract: bool = False):
+        return T.init_slot_state(self.cfg, max_batch, max_seq, abstract)
+
+    def slot_update(self, state, sub, slots):
+        return T.slot_update(state, sub, slots)
+
+    def slot_reset(self, state, slots, pos_values, rec=None):
+        return PG.slot_reset(state, slots, pos_values, rec)
+
+    def spec_commit(self, state, rec_stack, advance):
+        return T.spec_commit(state, rec_stack, advance)
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedCacheOps:
+    """Shared block-pool caches behind per-slot block tables.
+
+    ``num_blocks * page_size`` tokens of K/V memory total — resident
+    memory scales with live tokens, not ``max_batch * max_seq`` — and
+    full pages are shareable between slots (the radix prefix cache).
+    """
+    cfg: ArchConfig
+    num_blocks: int
+    page_size: int
+    paged: bool = True
+
+    @property
+    def spec(self) -> CacheSpec:
+        return self.cfg.cache_spec()
+
+    def init_slot_state(self, max_batch: int, max_seq: int,
+                        abstract: bool = False):
+        return PG.init_paged_slot_state(self.cfg, max_batch, max_seq,
+                                        self.num_blocks, self.page_size,
+                                        abstract)
+
+    def slot_update(self, state, sub, slots):
+        raise NotImplementedError(
+            "paged admissions extend in place through the block tables "
+            "(slot_reset + verify_step + spec_commit); there is no "
+            "separate prefill state to scatter")
+
+    def slot_reset(self, state, slots, pos_values, rec=None):
+        return PG.slot_reset(state, slots, pos_values, rec)
+
+    def spec_commit(self, state, rec_stack, advance):
+        return T.spec_commit(state, rec_stack, advance)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,15 +153,19 @@ class Model:
         return total - inactive
 
     # -- cache format --------------------------------------------------------
-    def with_cache_dtype(self, cache_dtype: Optional[str]) -> "Model":
+    def with_cache_dtype(self, cache_dtype) -> "Model":
         """Same architecture with the serving-cache storage format swapped.
 
+        Accepts a :class:`~repro.configs.base.CacheSpec` (the full format:
+        dtype, scale block, paging) or the legacy string spelling —
         ``"int8"`` turns on the per-block-scaled quantized caches
         (:mod:`repro.core.quant_cache`); ``None`` or a float name keeps
         full-precision caches.  Parameter shapes/specs are unchanged —
         only ``init_decode_state``/``init_slot_state`` layouts and the
         decode read/write paths differ.
         """
+        if isinstance(cache_dtype, CacheSpec):
+            return self.with_cache_spec(cache_dtype)
         if cache_dtype in (None, "none", "float", "fp32", "fp16", "bf16"):
             return self
         if cache_dtype == "int8":
@@ -58,7 +173,35 @@ class Model:
                 return self
             return Model(dataclasses.replace(self.cfg, cache_quant="int8"))
         raise ValueError(f"unknown cache_dtype {cache_dtype!r}; expected "
-                         f"'int8', a float dtype name, or None")
+                         f"a CacheSpec, 'int8', a float dtype name, or None")
+
+    def with_cache_spec(self, spec: CacheSpec) -> "Model":
+        """Same architecture with ``cfg.cache`` pinned to ``spec``.
+
+        Clears the legacy ``kv_cache_bits``/``cache_quant`` knobs so the
+        spec is the one spelling in play (mixing them raises in
+        :meth:`ArchConfig.cache_spec`).
+        """
+        if self.cfg.cache == spec:
+            return self
+        return Model(dataclasses.replace(self.cfg, cache=spec,
+                                         kv_cache_bits=16,
+                                         cache_quant="none"))
+
+    def cache_ops(self, num_blocks: Optional[int] = None,
+                  page_size: Optional[int] = None) -> "CacheOps":
+        """The :class:`CacheOps` backend for this model's resolved
+        :class:`CacheSpec` — :class:`PagedCacheOps` when ``spec.paged``
+        (``num_blocks`` required; ``page_size`` defaults to the spec's),
+        else :class:`DenseCacheOps`."""
+        spec = self.cfg.cache_spec()
+        if not spec.paged:
+            return DenseCacheOps(self.cfg)
+        if num_blocks is None:
+            raise ValueError("paged cache backend needs num_blocks (the "
+                             "pool size bounds resident cache memory)")
+        return PagedCacheOps(self.cfg, num_blocks,
+                             page_size or spec.page_size)
 
     # -- compute ------------------------------------------------------------
     def forward(self, params, batch, pol: Optional[ExecutionPolicy] = None):

@@ -1,0 +1,176 @@
+"""Paged slot memory: a shared fixed-size block pool + per-slot tables.
+
+The dense serving layout gives every decode slot its own
+``max_seq``-long K/V cache, so memory is ``max_batch * max_seq``
+regardless of how many tokens are actually live.  The paged layout keeps
+**one pool per cache family**
+
+    pool:        (L, num_blocks, page_size, Hkv, dh)
+    block_table: (B, max_seq // page_size) int32   # logical page -> block
+
+and every slot addresses its cache through its block-table row: logical
+position ``t`` lives at ``(table[b, t // page], t % page)``.  Blocks are
+allocated lazily as a slot's write frontier crosses page boundaries and
+returned to a free list on retire (``runtime/block_pool.py`` owns the
+host-side accounting), so resident cache memory scales with live tokens
+— and **full pages are shareable**: a radix prefix cache can point many
+slots' tables at one physical block, because sharing is only ever of
+full pages strictly behind every reader's write frontier (writes land in
+private frontier pages, so shared blocks are immutable by construction;
+no copy-on-write pass is ever needed).
+
+Unallocated table entries hold the sentinel ``num_blocks``; reads clamp
+(jax gather semantics) into harmless in-pool garbage that the decode age
+mask excludes, and writes through the sentinel drop (``mode="drop"``) —
+the same discipline the dense path uses for admission padding.
+
+The quantized cache mode composes: int8 pools carry per-page scale pools
+``(L, num_blocks, page_size, Hkv, 1)`` with identical tables, so the
+quantization granularity (one scale per written vector) aligns with the
+paging granularity by construction and shared pages carry their scales
+with them.
+
+Recurrent state (rwkv/mamba) is O(1) per slot and stays dense per-slot
+exactly as in :class:`~repro.models.transformer.DecodeState`; the field
+names match so :func:`~repro.models.transformer.spec_commit` and the
+engine's scatter seams work on either state type unchanged.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.quant_cache import quantize_blocked
+
+Array = jax.Array
+
+
+class PagedDecodeState(NamedTuple):
+    """Slot decode state with pooled K/V (see module docstring).
+
+    Field names deliberately mirror :class:`DecodeState` — ``pos`` and
+    the recurrent fields are identical, only the K/V (+scale) layout and
+    the extra ``block_tables`` differ.
+    """
+    cache_k: Optional[Array] = None     # (L, N, page, Hkv, dh) pool
+    cache_v: Optional[Array] = None
+    block_tables: Optional[Array] = None  # (B, P) int32; N = unallocated
+    pos: Optional[Array] = None         # (B,) per-slot tokens seen
+    # ssm / hybrid (dense per-slot, as in DecodeState)
+    x_prev: Optional[Array] = None
+    cm_prev: Optional[Array] = None
+    wkv: Optional[Array] = None
+    conv_tail: Optional[Array] = None
+    ssm_h: Optional[Array] = None
+    # per-page int8 scale pools (CacheSpec.dtype == "int8" only)
+    scale_k: Optional[Array] = None     # (L, N, page, Hkv, 1)
+    scale_v: Optional[Array] = None
+    wkv_scale: Optional[Array] = None
+    ssm_scale: Optional[Array] = None
+
+
+def init_paged_slot_state(cfg: ArchConfig, max_batch: int, max_seq: int,
+                          num_blocks: int, page_size: int,
+                          abstract: bool = False) -> PagedDecodeState:
+    """Pool-backed slot state for ``max_batch`` persistent decode slots.
+
+    ``num_blocks`` bounds resident cache memory (``num_blocks *
+    page_size`` tokens across *all* slots, vs the dense layout's
+    ``max_batch * max_seq``); ``max_seq`` remains each slot's logical
+    capacity (the block-table width).  All tables start fully
+    unallocated (sentinel ``num_blocks``).
+    """
+    from repro.models import transformer as T   # late: avoid import cycle
+
+    if max_seq % page_size != 0:
+        raise ValueError(f"max_seq {max_seq} must be a multiple of "
+                         f"page_size {page_size}")
+    if num_blocks < 1:
+        raise ValueError(f"num_blocks must be >= 1, got {num_blocks}")
+    spec = cfg.cache_spec()
+    if spec.dtype == "fxp8":
+        raise ValueError("paged caches do not support the legacy "
+                         "fixed-scale fxp8 format")
+    if cfg.family != "ssm" and cfg.sliding_window and \
+            cfg.supports_long_context and max_seq > 65536:
+        raise ValueError(
+            "paged slot memory addresses caches linearly; the long_500k "
+            "ring-cache configuration is not supported (ROADMAP: ring "
+            "verify/paging is an open item)")
+
+    # Recurrent fields + per-row pos come straight from the dense slot
+    # init; only the K/V (+scale) leaves are re-laid-out as pools.
+    dense = T.init_slot_state(cfg, max_batch, max_seq, abstract)
+    fields: Dict[str, Any] = {
+        name: getattr(dense, name)
+        for name in ("pos", "x_prev", "cm_prev", "wkv", "conv_tail",
+                     "ssm_h", "wkv_scale", "ssm_scale")
+    }
+    mk = (jax.ShapeDtypeStruct if abstract
+          else (lambda sh, d: jnp.zeros(sh, d)))
+    if cfg.family != "ssm":
+        Lr, dh = cfg.n_layers, cfg.head_dim_
+        kv_dt = dense.cache_k.dtype
+        fields["cache_k"] = mk((Lr, num_blocks, page_size, cfg.n_kv_heads,
+                                dh), kv_dt)
+        fields["cache_v"] = mk((Lr, num_blocks, page_size, cfg.n_kv_heads,
+                                dh), kv_dt)
+        if spec.quantized:
+            fields["scale_k"] = mk((Lr, num_blocks, page_size,
+                                    cfg.n_kv_heads, 1), jnp.float32)
+            fields["scale_v"] = mk((Lr, num_blocks, page_size,
+                                    cfg.n_kv_heads, 1), jnp.float32)
+    P = max_seq // page_size
+    fields["block_tables"] = (
+        jax.ShapeDtypeStruct((max_batch, P), jnp.int32) if abstract
+        else jnp.full((max_batch, P), num_blocks, jnp.int32))
+    return PagedDecodeState(**fields)
+
+
+# Recurrent fields an admission scatter may load from a prefix-cache
+# snapshot (exact f32 host copies; quantized state re-quantizes on load).
+_REC_SNAPSHOT = ("x_prev", "cm_prev", "wkv", "conv_tail", "ssm_h")
+_SCALE_FOR = {"wkv": "wkv_scale", "ssm_h": "ssm_scale"}
+
+
+def slot_reset(state: PagedDecodeState, slots: Array, pos_values: Array,
+               rec: Optional[Dict[str, Array]] = None) -> PagedDecodeState:
+    """Reset admitted slots: per-row ``pos`` plus recurrent-state loads.
+
+    ``slots`` (G,) target slot indices (out-of-range = drop sentinel, as
+    in :func:`~repro.models.transformer.slot_update`); ``pos_values``
+    (G,) the committed position each slot resumes from (the matched
+    prefix length, 0 for a cold admission).  ``rec`` maps recurrent
+    field names to (L, G, ...) exact-f32 snapshots from the radix cache;
+    omitted fields reset to zero (the cold boundary state).  K/V pools
+    and block tables are untouched — tables are host-owned and pool
+    writes happen in the extend pass that follows.
+    """
+    slots = jnp.asarray(slots, jnp.int32)
+    rec = rec or {}
+    out: Dict[str, Any] = {
+        "pos": state.pos.at[slots].set(
+            jnp.asarray(pos_values, state.pos.dtype), mode="drop")}
+    for name in _REC_SNAPSHOT:
+        tgt = getattr(state, name)
+        if tgt is None:
+            continue
+        src = rec.get(name)
+        if src is None:
+            src = jnp.zeros((tgt.shape[0], slots.shape[0])
+                            + tgt.shape[2:], jnp.float32)
+        src = jnp.asarray(src, jnp.float32)
+        if tgt.dtype == jnp.int8:
+            q, s = quantize_blocked(src)
+            out[name] = tgt.at[:, slots].set(q, mode="drop")
+            sname = _SCALE_FOR[name]
+            out[sname] = getattr(state, sname).at[:, slots].set(
+                s[..., None] if s.ndim + 1 == getattr(state, sname).ndim
+                else s, mode="drop")
+        else:
+            out[name] = tgt.at[:, slots].set(src.astype(tgt.dtype),
+                                             mode="drop")
+    return state._replace(**out)

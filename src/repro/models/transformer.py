@@ -320,24 +320,22 @@ class DecodeState(NamedTuple):
 
 
 def _cache_quant(cfg: ArchConfig) -> bool:
-    """Whether the per-block int8 serving-cache format is active."""
-    if cfg.cache_quant not in ("none", "int8"):
-        raise ValueError(f"unknown cache_quant {cfg.cache_quant!r}; "
-                         f"expected 'none' or 'int8'")
-    qc = cfg.cache_quant == "int8"
-    if qc and cfg.kv_cache_bits == 8:
-        raise ValueError(
-            "cache_quant='int8' (per-block scales) and kv_cache_bits=8 "
-            "(fixed Q3.4 scale) are mutually exclusive KV-cache formats")
-    return qc
+    """Whether the per-block int8 serving-cache format is active.
+
+    Delegates to :meth:`ArchConfig.cache_spec` — the one resolver for the
+    cache format — so unknown ``cache_quant`` strings and the
+    int8-vs-fxp8 mutual exclusion raise here exactly as before.
+    """
+    return cfg.cache_spec().quantized
 
 
 def init_decode_state(cfg: ArchConfig, batch: int, max_seq: int,
                       abstract: bool = False) -> DecodeState:
     Lr, D, dh = cfg.n_layers, cfg.d_model, cfg.head_dim_
     dt = _dt(cfg)
-    qc = _cache_quant(cfg)
-    kv_dt = jnp.int8 if (cfg.kv_cache_bits == 8 or qc) else dt
+    spec = cfg.cache_spec()
+    qc = spec.quantized
+    kv_dt = jnp.int8 if spec.dtype in ("int8", "fxp8") else dt
     mk = (jax.ShapeDtypeStruct if abstract
           else (lambda sh, d: jnp.zeros(sh, d)))
     fields: Dict[str, Any] = {"pos": (jax.ShapeDtypeStruct((), jnp.int32)
@@ -389,8 +387,11 @@ def decode_step(params: Dict[str, Any], state: DecodeState,
     b = x.shape[0]
     pos = state.pos
     per_row = jnp.ndim(pos) == 1            # serving slots: own pos per row
+    paged = getattr(state, "block_tables", None) is not None
     if state.cache_k is not None:
         cache_len = state.cache_k.shape[2]
+        if paged:   # pool (L,N,page,...): logical capacity is the table's
+            cache_len = state.block_tables.shape[1] * cache_len
         if cfg.sliding_window and cache_len <= cfg.sliding_window:
             # ring cache (long_500k): every layer is windowed
             windows = jnp.full((cfg.n_layers,), cfg.sliding_window, jnp.int32)
@@ -433,7 +434,18 @@ def decode_step(params: Dict[str, Any], state: DecodeState,
         positions = (pos[:, None].astype(jnp.int32) if per_row
                      else jnp.full((1,), pos, jnp.int32))
         q, k, v = A.qkv(h, _attn_params(bp, cfg), cfg, pol, positions)
-        if qc:
+        if paged:
+            if qc:
+                ctx, ck2, cv2, sk2, sv2 = A.paged_decode_attention(
+                    q, k, v, ck, cv, state.block_tables, pos, cfg, pol,
+                    win, scale_k=sk_, scale_v=sv_)
+                new_caches = (ck2, cv2, sk2, sv2)
+            else:
+                ctx, ck2, cv2 = A.paged_decode_attention(
+                    q, k, v, ck, cv, state.block_tables, pos, cfg, pol,
+                    win)
+                new_caches = (ck2, cv2)
+        elif qc:
             ctx, ck2, cv2, sk2, sv2 = A.decode_attention(
                 q, k, v, ck, cv, pos, cfg, pol, win,
                 scale_k=sk_, scale_v=sv_)
@@ -790,8 +802,11 @@ def verify_step(params: Dict[str, Any], state: DecodeState,
     offs = jnp.arange(kq, dtype=jnp.int32)
     positions = (pos[:, None].astype(jnp.int32) + offs[None, :] if per_row
                  else pos.astype(jnp.int32) + offs)
+    paged = getattr(state, "block_tables", None) is not None
     if state.cache_k is not None:
         cache_len = state.cache_k.shape[2]
+        if paged:   # pool (L,N,page,...): logical capacity is the table's
+            cache_len = state.block_tables.shape[1] * cache_len
         if cfg.sliding_window and cache_len <= cfg.sliding_window:
             windows = jnp.full((cfg.n_layers,), cfg.sliding_window,
                                jnp.int32)
@@ -837,7 +852,18 @@ def verify_step(params: Dict[str, Any], state: DecodeState,
             extra = xs[4:]
         h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
         q, k, v = A.qkv(h, _attn_params(bp, cfg), cfg, pol, positions)
-        if qc:
+        if paged:
+            if qc:
+                ctx, ck2, cv2, sk2, sv2 = A.paged_verify_attention(
+                    q, k, v, ck, cv, state.block_tables, pos, cfg, pol,
+                    win, scale_k=sk_, scale_v=sv_)
+                new_caches = (ck2, cv2, sk2, sv2)
+            else:
+                ctx, ck2, cv2 = A.paged_verify_attention(
+                    q, k, v, ck, cv, state.block_tables, pos, cfg, pol,
+                    win)
+                new_caches = (ck2, cv2)
+        elif qc:
             ctx, ck2, cv2, sk2, sv2 = A.verify_attention(
                 q, k, v, ck, cv, pos, cfg, pol, win,
                 scale_k=sk_, scale_v=sv_)

@@ -1,0 +1,228 @@
+"""Host-side block accounting for the paged slot cache.
+
+Two small pure-python pieces the :class:`~repro.runtime.serve_loop.
+ServeEngine` drives between jitted steps:
+
+:class:`BlockAllocator`
+    Refcounted free list over the ``num_blocks`` pool blocks of
+    :func:`repro.models.paged.init_paged_slot_state`.  A block is held
+    once per slot whose table references it plus once by the radix cache
+    if a trie node owns it; it returns to the free list when the count
+    hits zero.  ``assert_balanced()`` is the leak oracle the tests pin
+    across retire/refill and spec rollback.
+
+:class:`RadixCache`
+    A page-granular prefix trie over prompt tokens.  Each node is one
+    *full* page (``page_size`` tokens) that some admitted prompt
+    prefilled; it owns a cache reference on its pool block and, for
+    recurrent families, an exact-f32 host snapshot of the recurrent
+    state at the page boundary.  Admissions walk the trie and reference
+    the matched blocks directly in the new slot's table — the prefix is
+    never recomputed and never copied (shared pages sit strictly behind
+    every reader's write frontier, so they are immutable by
+    construction; there is nothing to copy-on-write).  Nodes are evicted
+    LRU-leaf-first when the allocator runs dry.
+
+Nothing here touches jax: tables are host numpy, passed to the jitted
+programs as plain arguments each step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+class BlockAllocator:
+    """Refcounted free-list allocator over pool block ids ``0..n-1``."""
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 1:
+            raise ValueError(f"num_blocks must be >= 1, got {num_blocks}")
+        self.num_blocks = num_blocks
+        self._refs = np.zeros(num_blocks, np.int32)
+        self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def alloc(self) -> Optional[int]:
+        """Take a free block at refcount 1, or None when dry."""
+        if not self._free:
+            return None
+        blk = self._free.pop()
+        self._refs[blk] = 1
+        return blk
+
+    def ref(self, blk: int) -> None:
+        """Add a reference to a live block (prefix sharing)."""
+        if self._refs[blk] <= 0:
+            raise ValueError(f"ref of dead block {blk}")
+        self._refs[blk] += 1
+
+    def free(self, blk: int) -> None:
+        """Drop one reference; the block is recycled at zero."""
+        if self._refs[blk] <= 0:
+            raise ValueError(f"double free of block {blk}")
+        self._refs[blk] -= 1
+        if self._refs[blk] == 0:
+            self._free.append(blk)
+
+    def refcount(self, blk: int) -> int:
+        return int(self._refs[blk])
+
+    def assert_balanced(self) -> None:
+        """Leak oracle: every block is free xor referenced, exactly."""
+        live = int(np.count_nonzero(self._refs))
+        if live + len(self._free) != self.num_blocks:
+            raise AssertionError(
+                f"block leak: {live} referenced + {len(self._free)} free "
+                f"!= {self.num_blocks} total")
+        if len(set(self._free)) != len(self._free):
+            raise AssertionError("free list contains duplicates")
+        for blk in self._free:
+            if self._refs[blk] != 0:
+                raise AssertionError(f"block {blk} free with refcount "
+                                     f"{self._refs[blk]}")
+
+
+@dataclasses.dataclass
+class RadixNode:
+    """One full prefilled page: a trie edge keyed by its page of tokens."""
+    key: Tuple[int, ...]                       # the page's tokens
+    block: Optional[int]                       # pool block (None for ssm)
+    rec: Optional[Dict[str, np.ndarray]]       # (L, ...) state at page end
+    children: Dict[Tuple[int, ...], "RadixNode"] = \
+        dataclasses.field(default_factory=dict)
+    parent: Optional["RadixNode"] = None
+    last_used: int = 0
+
+
+class RadixCache:
+    """Page-granular prefix trie over prompt tokens (see module doc)."""
+
+    def __init__(self, allocator: Optional[BlockAllocator], page_size: int):
+        self.allocator = allocator          # None for pure-recurrent (ssm)
+        self.page_size = page_size
+        self.root = RadixNode(key=(), block=None, rec=None)
+        self._clock = 0
+        self.hits = 0                       # pages served from the trie
+        self.misses = 0                     # pages prefilled fresh
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    def __len__(self) -> int:
+        def count(n: RadixNode) -> int:
+            return sum(1 + count(c) for c in n.children.values())
+        return count(self.root)
+
+    def match(self, tokens: np.ndarray
+              ) -> Tuple[int, List[RadixNode]]:
+        """Longest full-page prefix of ``tokens`` present in the trie.
+
+        Returns ``(matched_tokens, nodes)`` — ``matched_tokens`` is a
+        multiple of ``page_size``, **capped below ``len(tokens)``** so at
+        least one suffix token always remains to be computed (the extend
+        pass must produce the prompt's next-token logits).  ``nodes`` are
+        the matched pages in order; the caller takes its own block
+        references before using them.
+        """
+        page = self.page_size
+        limit = (len(tokens) - 1) // page       # full pages usable
+        now = self._tick()
+        nodes: List[RadixNode] = []
+        cur = self.root
+        for p in range(limit):
+            key = tuple(int(t) for t in tokens[p * page:(p + 1) * page])
+            nxt = cur.children.get(key)
+            if nxt is None:
+                break
+            nxt.last_used = now
+            nodes.append(nxt)
+            cur = nxt
+        return len(nodes) * page, nodes
+
+    def insert(self, tokens: np.ndarray, n_tokens: int,
+               blocks: List[Optional[int]],
+               recs: Optional[List[Dict[str, np.ndarray]]] = None) -> int:
+        """Register the full pages of ``tokens[:n_tokens]`` in the trie.
+
+        ``blocks[p]`` is the pool block holding logical page ``p`` (None
+        for pure-recurrent families); ``recs[p]`` the recurrent-state
+        snapshot at the end of page ``p``.  Pages already present are
+        left alone (first write wins — the existing block is the one
+        other slots may already share); new nodes take a cache reference
+        on their block.  Returns the number of nodes added.
+        """
+        page = self.page_size
+        full = n_tokens // page
+        now = self._tick()
+        cur = self.root
+        added = 0
+        for p in range(full):
+            key = tuple(int(t) for t in tokens[p * page:(p + 1) * page])
+            nxt = cur.children.get(key)
+            if nxt is None:
+                blk = blocks[p] if blocks else None
+                node = RadixNode(key=key, block=blk,
+                                 rec=(recs[p] if recs else None),
+                                 parent=cur, last_used=now)
+                if blk is not None:
+                    self.allocator.ref(blk)
+                cur.children[key] = node
+                nxt = node
+                added += 1
+            else:
+                nxt.last_used = now
+            cur = nxt
+        return added
+
+    def evict(self, need: int) -> int:
+        """Free >= ``need`` blocks by dropping LRU leaf nodes.
+
+        Only leaves can go (an inner node's block sits under its
+        children's prefixes); a leaf whose block other slots still
+        reference can be dropped from the trie too — the slots keep
+        their references, only the cache's own reference is returned.
+        Returns the number of blocks actually freed to the free list.
+        """
+        freed = 0
+        while freed < need:
+            leaves: List[RadixNode] = []
+
+            def walk(n: RadixNode) -> None:
+                for c in n.children.values():
+                    if c.children:
+                        walk(c)
+                    else:
+                        leaves.append(c)
+            walk(self.root)
+            if not leaves:
+                break
+            victim = min(leaves, key=lambda n: n.last_used)
+            del victim.parent.children[victim.key]
+            if victim.block is not None:
+                before = self.allocator.free_blocks
+                self.allocator.free(victim.block)
+                freed += self.allocator.free_blocks - before
+            else:
+                freed += 1          # recurrent-only node: nothing pooled
+        return freed
+
+    def clear(self) -> None:
+        """Drop every node (and the cache's block references)."""
+        def drop(n: RadixNode) -> None:
+            for c in n.children.values():
+                drop(c)
+                if c.block is not None:
+                    self.allocator.free(c.block)
+        drop(self.root)
+        self.root.children.clear()

@@ -45,15 +45,70 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
+import warnings
 from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs.base import CacheSpec
 from repro.kernels import common as kernel_common
 from repro.models.model_zoo import Model
+from repro.runtime.block_pool import BlockAllocator, RadixCache
 from repro.runtime.drafter import Drafter, DraftSession, NGramDrafter
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Every knob of :class:`ServeEngine`, validated in one place.
+
+    Replaces the kwarg sprawl of the original constructor (``max_batch``,
+    ``max_seq``, ``greedy``, ... each positional-ish and undocumented);
+    the old kwargs still work for one release through a deprecation shim.
+
+    ``cache`` pins the slot-cache storage format (dtype, scale block,
+    paged on/off — see :class:`repro.configs.base.CacheSpec`); the legacy
+    ``cache_dtype`` string survives for compatibility but cannot be
+    combined with ``cache``.  When the resolved spec is paged:
+
+      * ``num_blocks`` sizes the shared block pool (default: full
+        occupancy, ``max_batch * max_seq / page_size`` — size it *below*
+        that to cap resident cache memory by live tokens instead of
+        worst case);
+      * ``prefix_cache`` keeps a radix trie over admitted prompts so an
+        admission sharing a full-page prefix with earlier traffic
+        references those blocks instead of recomputing them.
+    """
+
+    max_batch: int = 8
+    max_seq: int = 256
+    greedy: bool = True
+    min_bucket: int = 16
+    spec_k: int = 0
+    drafter: Optional[Drafter] = None
+    cache_dtype: Optional[str] = None      # legacy string; prefer `cache`
+    cache: Optional[CacheSpec] = None
+    num_blocks: Optional[int] = None
+    prefix_cache: bool = True
+
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.max_seq < 1:
+            raise ValueError(f"max_seq must be >= 1, got {self.max_seq}")
+        if self.min_bucket < 1:
+            raise ValueError(f"min_bucket must be >= 1, got "
+                             f"{self.min_bucket}")
+        if self.spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {self.spec_k}")
+        if self.cache is not None and self.cache_dtype is not None:
+            raise ValueError("cache (a CacheSpec) and the legacy "
+                             "cache_dtype string are two spellings of the "
+                             "same thing; pass exactly one")
+        if self.num_blocks is not None and self.num_blocks < 1:
+            raise ValueError(f"num_blocks must be >= 1, got "
+                             f"{self.num_blocks}")
 
 
 @dataclasses.dataclass
@@ -83,6 +138,9 @@ class _Slot:
     # per-request drafting state (spec mode only): seeded with prompt +
     # first token, extended with every committed token
     session: Optional[DraftSession] = None
+    # host mirror of the device-side committed position (tokens in cache);
+    # drives paged-mode page allocation ahead of each step's writes
+    pos: int = 0
 
 
 def next_pow2(n: int) -> int:
@@ -95,29 +153,79 @@ def next_pow2(n: int) -> int:
 class ServeEngine:
     """Continuous-batching serve engine (slot scheduler, bucketed shapes)."""
 
-    def __init__(self, model: Model, params, max_batch: int = 8,
-                 max_seq: int = 256, greedy: bool = True,
-                 min_bucket: int = 16, spec_k: int = 0,
-                 drafter: Optional[Drafter] = None,
-                 cache_dtype: Optional[str] = None):
-        # cache_dtype="int8" swaps the slot caches to the per-block-scaled
-        # quantized format (core/quant_cache.py): scale leaves are ordinary
-        # pytree leaves of the slot state, so bucketing/trace discipline is
-        # untouched — same trace counts, ~4x smaller K/V + wkv/ssm state.
-        if cache_dtype is not None:
-            model = model.with_cache_dtype(cache_dtype)
+    def __init__(self, model: Model, params,
+                 config: Optional[ServeConfig] = None, **legacy_kwargs):
+        if config is None:
+            # deprecation shim: the pre-ServeConfig kwarg spelling
+            # (``ServeEngine(m, p, max_batch=4, ...)``) still works for
+            # one release; unknown names fail in ServeConfig as before
+            config = ServeConfig(**legacy_kwargs)
+            if legacy_kwargs:
+                warnings.warn(
+                    "ServeEngine(max_batch=..., ...) kwargs are "
+                    "deprecated; pass ServeEngine(model, params, "
+                    "ServeConfig(...))", DeprecationWarning, stacklevel=2)
+        elif legacy_kwargs:
+            raise TypeError("pass either a ServeConfig or legacy kwargs, "
+                            "not both")
+        self.config = config
+        # cache format: `cache` (CacheSpec) is the one spelling going
+        # forward (dtype + scale blocks + paging); cache_dtype="int8"
+        # survives as the legacy string.  Scale leaves are ordinary pytree
+        # leaves of the slot state, so bucketing/trace discipline is
+        # untouched either way — same trace counts, ~4x smaller K/V +
+        # wkv/ssm state in int8.
+        if config.cache is not None:
+            model = model.with_cache_spec(config.cache)
+        elif config.cache_dtype is not None:
+            model = model.with_cache_dtype(config.cache_dtype)
         self.model = model
         self.params = params
-        self.max_batch = max_batch
-        self.max_seq = max_seq
-        self.greedy = greedy
-        self.min_bucket = min_bucket
+        max_batch = self.max_batch = config.max_batch
+        max_seq = self.max_seq = config.max_seq
+        self.greedy = config.greedy
+        self.min_bucket = config.min_bucket
+        spec_k = config.spec_k
+        drafter = config.drafter
+        # -- paged slot memory + radix prefix cache ------------------------
+        # (cfg-less stand-in models — the warm-boot test's stub — serve
+        # nothing and get the dense ops seam lazily, so guard the lookups)
+        cfg = getattr(model, "cfg", None)
+        spec = cfg.cache_spec() if cfg is not None else None
+        self.paged = spec is not None and spec.paged
+        if self.paged:
+            if model.cfg.input_kind != "tokens":
+                raise ValueError("paged serving admits through the extend "
+                                 "(verify) pass, which needs token inputs")
+            if max_seq % spec.page_size != 0:
+                raise ValueError(f"max_seq {max_seq} must be a multiple of "
+                                 f"page_size {spec.page_size}")
+            self.page_size = spec.page_size
+            self._n_pages = max_seq // spec.page_size
+            num_blocks = (config.num_blocks
+                          or max_batch * self._n_pages)
+            self.ops = model.cache_ops(num_blocks=num_blocks,
+                                       page_size=spec.page_size)
+            pooled = model.cfg.family != "ssm"   # ssm: recurrent-only
+            self.allocator = (BlockAllocator(num_blocks) if pooled
+                              else None)
+            self.radix = (RadixCache(self.allocator, spec.page_size)
+                          if config.prefix_cache else None)
+            # authoritative block tables live host-side; every jitted call
+            # gets the current numpy copy (cheap C++ argument path) and
+            # the device echo in the returned state is ignored
+            self._tables = np.full((max_batch, self._n_pages),
+                                   num_blocks, np.int32)
+        else:
+            self.ops = (model.cache_ops() if hasattr(model, "cache_ops")
+                        else None)
+            self.allocator = None
+            self.radix = None
+            self._tables = None
         # speculative decoding: a drafter proposes up to spec_k tokens per
         # slot and one bucketed verify call scores all spec_k+1 positions
         # in a single pass; greedy outputs stay bit-identical to plain
         # decode (per-query verify numerics are the exact decode ops).
-        if spec_k < 0:
-            raise ValueError(f"spec_k must be >= 0, got {spec_k}")
         if spec_k and (model.cfg.input_kind != "tokens"
                        or model.cfg.n_codebooks):
             raise ValueError("speculative decoding needs a plain token "
@@ -128,10 +236,11 @@ class ServeEngine:
             # (abstract: no memory): a slot K/V cache shorter than max_seq
             # is a ring, and verify_attention's linear-cache writes are
             # deliberately wrong there (ROADMAP: ring-cache verify is an
-            # open item) — refuse, don't corrupt
-            abs_state = model.init_slot_state(max_batch, max_seq,
-                                              abstract=True)
-            if (abs_state.cache_k is not None
+            # open item) — refuse, don't corrupt.  Paged caches are linear
+            # by construction (their init refuses ring configs).
+            abs_state = self.ops.init_slot_state(max_batch, max_seq,
+                                                 abstract=True)
+            if (not self.paged and abs_state.cache_k is not None
                     and abs_state.cache_k.shape[2] < max_seq):
                 raise ValueError("speculative decoding over ring caches "
                                  "(long-context sliding-window decode) is "
@@ -160,7 +269,25 @@ class ServeEngine:
 
         def _insert_fn(st, sub, slots):
             self.trace_counts["insert"] += 1
-            return model.slot_update(st, sub, slots)
+            return self.ops.slot_update(st, sub, slots)
+
+        def _reset_fn(st, slots, pos_values, rec):
+            self.trace_counts["reset"] += 1
+            return self.ops.slot_reset(st, slots, pos_values, rec)
+
+        def _extend_fn(p, st, toks, adv):
+            # paged admission: score the whole suffix window in one
+            # verify pass and commit the per-row suffix lengths in the
+            # same program (advance 0 restores non-admitted rows exactly
+            # from their checkpoint-0 state; their stray K/V writes sit
+            # past pos, invisible until overwritten — the spec-decode
+            # rollback invariant).  rec_stack is returned so the radix
+            # cache can snapshot recurrent state at page boundaries.
+            self.trace_counts["extend"] += 1
+            logits, st2, rec = model.verify_step(p, st, {"tokens": toks})
+            ids = jnp.argmax(logits, axis=-1)
+            st2 = model.spec_commit(st2, rec, adv)
+            return ids, logits, st2, rec
 
         def _verify_fn(p, st, toks):
             self.trace_counts["verify"] += 1
@@ -188,6 +315,10 @@ class ServeEngine:
                                donate_argnums=(1,) if donate else ())
         self._insert = jax.jit(_insert_fn,
                                donate_argnums=(0,) if donate else ())
+        self._reset = jax.jit(_reset_fn,
+                              donate_argnums=(0,) if donate else ())
+        self._extend = jax.jit(_extend_fn,
+                               donate_argnums=(1,) if donate else ())
         self._verify = jax.jit(_verify_fn,
                                donate_argnums=(1,) if donate else ())
         self._commit = jax.jit(_commit_fn,
@@ -214,6 +345,10 @@ class ServeEngine:
             # at the end of every serve() call)
             "spec_steps": 0, "draft_tokens": 0, "draft_accepted": 0,
             "spec_acceptance": 0.0, "tokens_per_step": 0.0,
+            # paged mode: prompt tokens served from the radix prefix cache
+            # (prefill compute that never ran) and the block pool's
+            # high-water mark (resident cache memory in pages)
+            "prefix_hit_tokens": 0, "peak_blocks": 0,
         }
         self._occ_num = 0
         self._occ_den = 0
@@ -242,6 +377,13 @@ class ServeEngine:
                 raise ValueError(f"request {r.rid}: max_new_tokens < 1")
             if len(r.prompt) < 1:
                 raise ValueError(f"request {r.rid}: empty prompt")
+            if self.allocator is not None:
+                pages = min(-(-need // self.page_size), self._n_pages)
+                if pages > self.allocator.num_blocks:
+                    raise ValueError(
+                        f"request {r.rid}: needs {pages} pages but the "
+                        f"block pool only holds "
+                        f"{self.allocator.num_blocks}; raise num_blocks")
 
     def _pull_logits(self, logits, sampling: bool):
         """Host-side view of a step's logits: greedy needs only B ints
@@ -288,7 +430,209 @@ class ServeEngine:
         self.events.append(("retire", r.rid, -1 if i is None else i,
                             int(self.metrics["decode_steps"])))
         if i is not None:
+            if self.paged:
+                self._free_slot_pages(i)
             self._slots[i] = None
+
+    # -- paged slot memory ---------------------------------------------------
+
+    def _st(self):
+        """The jit-call view of the slot state.  Paged engines substitute
+        the authoritative host block tables on every call (numpy rides the
+        cheap C++ argument path); the device echo in the returned state is
+        one step stale the moment the host reallocates a page."""
+        if not self.paged:
+            return self._state
+        return self._state._replace(block_tables=self._tables)
+
+    def _alloc_block(self) -> Optional[int]:
+        """One free pool block, evicting radix LRU leaves if dry."""
+        blk = self.allocator.alloc()
+        if blk is None and self.radix is not None:
+            if self.radix.evict(1):
+                blk = self.allocator.alloc()
+        if blk is not None:
+            self.metrics["peak_blocks"] = max(
+                self.metrics["peak_blocks"], self.allocator.used_blocks)
+        return blk
+
+    def _ensure_pages(self, i: int, last_pos: int) -> None:
+        """Allocate slot ``i``'s table entries for every page a step may
+        write, up to absolute position ``last_pos`` (writes past
+        ``max_seq`` drop at the model layer, so the cap is harmless)."""
+        if self.allocator is None:       # recurrent-only: nothing pooled
+            return
+        sentinel = self.allocator.num_blocks
+        row = self._tables[i]
+        last = min(last_pos, self.max_seq - 1) // self.page_size
+        for p in range(last + 1):
+            if row[p] == sentinel:
+                blk = self._alloc_block()
+                if blk is None:
+                    # every block is pinned by some live slot: with the
+                    # default full-occupancy pool this is unreachable, an
+                    # undersized pool oversubscribed by live tokens has no
+                    # page to give (requests are never silently dropped)
+                    raise RuntimeError(
+                        f"block pool exhausted: slot {i} needs page {p} "
+                        f"and eviction freed nothing; raise num_blocks")
+                row[p] = blk
+
+    def _free_slot_pages(self, i: int) -> None:
+        """Return every block slot ``i`` references (retire path)."""
+        if self.allocator is None:
+            return
+        sentinel = self.allocator.num_blocks
+        row = self._tables[i]
+        for p in range(self._n_pages):
+            if row[p] != sentinel:
+                self.allocator.free(int(row[p]))
+        row[:] = sentinel
+
+    def _admit_paged(self, group: List[Request], free: List[int],
+                     done: List[Request]) -> List[Request]:
+        """Extend-admission into paged slots; returns requests deferred
+        for lack of blocks (the caller requeues them, order preserved).
+
+        Per request: walk the radix trie for the longest full-page prompt
+        prefix, take cache references on the matched blocks, allocate
+        private pages for the suffix, then one ``slot_reset`` (resume
+        ``pos`` at the matched length, load the page-boundary recurrent
+        snapshot) and one bucket-padded extend program — a ``verify_step``
+        over the suffix window committed by its per-row suffix lengths —
+        compute every admitted request's prompt continuation at once.
+        Rows not being admitted ride along with advance 0: the commit
+        restores their exact pre-call state from checkpoint 0 and their
+        stray K/V writes sit past ``pos`` (or drop at table sentinels),
+        invisible until overwritten — the spec-decode rollback invariant.
+        """
+        b = self.max_batch
+        page = self.page_size
+        now = time.monotonic()
+        plan = []                     # (req, slot, matched, nodes)
+        leftover: List[Request] = []
+        free_iter = iter(free)
+        for r in group:
+            m, nodes = (self.radix.match(r.prompt)
+                        if self.radix is not None else (0, []))
+            if self.allocator is not None:
+                taken: List[int] = []
+                for node in nodes:    # slot's own refs on shared pages
+                    self.allocator.ref(node.block)
+                    taken.append(node.block)
+                new_blocks: List[int] = []
+                dry = False
+                for _ in range(m // page, (len(r.prompt) - 1) // page + 1):
+                    blk = self._alloc_block()
+                    if blk is None:
+                        dry = True
+                        break
+                    new_blocks.append(blk)
+                if dry:               # roll this request back, keep going
+                    for blk in taken + new_blocks:
+                        self.allocator.free(blk)
+                    leftover.append(r)
+                    continue
+                slot_i = next(free_iter)
+                row = self._tables[slot_i]
+                for p, node in enumerate(nodes):
+                    row[p] = node.block
+                for q, blk in enumerate(new_blocks):
+                    row[m // page + q] = blk
+            else:
+                slot_i = next(free_iter)
+            if self.radix is not None:
+                self.radix.hits += m // page
+                self.radix.misses += (len(r.prompt) - 1) // page + 1 \
+                    - m // page
+            plan.append((r, slot_i, m, nodes))
+        if not plan:
+            return leftover
+
+        # one reset program: pos + recurrent snapshots for warm slots
+        # (rec keys are the state's recurrent fields — fixed per family,
+        # so the reset trace is reused across admissions)
+        slots_arr = np.full((b,), b, np.int32)     # sentinel rows drop
+        pos_vals = np.zeros((b,), np.int32)
+        rec: Dict[str, np.ndarray] = {}
+        for name in ("x_prev", "cm_prev", "wkv", "conv_tail", "ssm_h"):
+            leaf = getattr(self._state, name, None)
+            if leaf is not None:
+                rec[name] = np.zeros((leaf.shape[0], b) + tuple(
+                    leaf.shape[2:]), np.float32)
+        for j, (r, slot_i, m, nodes) in enumerate(plan):
+            slots_arr[j] = slot_i
+            pos_vals[j] = m
+            if m and rec:
+                snap = nodes[-1].rec
+                for name, arr in rec.items():
+                    arr[:, j] = snap[name]
+        self._state = self._reset(self._st(), slots_arr, pos_vals, rec)
+
+        # one extend program at the suffix bucket
+        bucket = self._bucket(max(len(r.prompt) - m
+                                  for r, _, m, _ in plan))
+        toks = np.zeros((b, bucket), np.int32)
+        adv = np.zeros((b,), np.int32)
+        for r, slot_i, m, _ in plan:
+            sfx = len(r.prompt) - m
+            toks[slot_i, :sfx] = r.prompt[m:]
+            adv[slot_i] = sfx
+        ids_dev, logits, self._state, rec_stack = self._extend(
+            self.params, self._st(), toks, adv)
+        ids = np.asarray(ids_dev)                         # (B, bucket)
+        rows = None
+        if not self.greedy and any(r.temperature > 0.0
+                                   for r, _, _, _ in plan):
+            rows = np.asarray(logits.astype(jnp.float32))  # (B, bkt, V)
+        rec_np = ({name: np.asarray(stk, np.float32)
+                   for name, stk in rec_stack.items()}
+                  if self.radix is not None else {})
+
+        for r, slot_i, m, nodes in plan:
+            sfx = len(r.prompt) - m
+            r.admitted_at = now
+            self._wait_sum += max(0.0, now - r.submitted_at)
+            self.metrics["prefill_tokens"] += sfx
+            self.metrics["prefix_hit_tokens"] += m
+            self.events.append(("admit", r.rid, slot_i,
+                                int(self.metrics["decode_steps"])))
+            rng = (np.random.default_rng([r.seed, r.rid])
+                   if not self.greedy and r.temperature > 0.0 else None)
+            slot = _Slot(req=r, next_token=0, produced=0, tokens=[],
+                         rng=rng, pos=len(r.prompt))
+            if rows is None:
+                slot.next_token = int(ids[slot_i, sfx - 1])
+            else:
+                slot.next_token = self._select_token(
+                    slot, rows[slot_i, sfx - 1])
+            slot.tokens.append(slot.next_token)
+            slot.produced = 1
+            if self.spec_k:
+                slot.session = self.drafter.begin(
+                    [int(t) for t in r.prompt] + [slot.next_token])
+            if self.radix is not None and len(r.prompt) // page:
+                # register this prompt's full pages; snapshot recurrent
+                # state at each page boundary from the extend checkpoints
+                # (checkpoint j = state after j suffix tokens, so the
+                # page-p boundary sits at j = (p+1)*page - m)
+                full = len(r.prompt) // page
+                blocks = ([int(self._tables[slot_i, p])
+                           for p in range(full)]
+                          if self.allocator is not None else None)
+                recs = []
+                for p in range(full):
+                    j = (p + 1) * page - m
+                    recs.append({name: stk[j, :, slot_i].copy()
+                                 for name, stk in rec_np.items()}
+                                if j >= 1 else None)
+                self.radix.insert(r.prompt, len(r.prompt), blocks, recs)
+            if slot.produced >= r.max_new_tokens:   # 1-token request
+                self._free_slot_pages(slot_i)
+                self._retire(None, slot, done)
+            else:
+                self._slots[slot_i] = slot
+        return leftover
 
     def _admit(self, group: List[Request], free: List[int],
                done: List[Request]) -> None:
@@ -349,7 +693,10 @@ class ServeEngine:
             nb = {"tokens": tokens}
         else:               # frame stubs decode over embedded tokens
             nb = {"frames": np.zeros((b, 1, cfg.d_model), np.float32)}
-        logits, self._state = self._decode(self.params, self._state, nb)
+        if self.paged:      # this step writes each slot's position `pos`
+            for i in active:
+                self._ensure_pages(i, self._slots[i].pos)
+        logits, self._state = self._decode(self.params, self._st(), nb)
         ids, rows = self._pull_logits(
             logits, any(self._slots[i].rng is not None for i in active))
         self.metrics["decode_steps"] += 1
@@ -363,6 +710,7 @@ class ServeEngine:
             slot.next_token = self._next_token(slot, i, ids, rows)
             slot.tokens.append(slot.next_token)
             slot.produced += 1
+            slot.pos += 1
             if slot.session is not None:
                 slot.session.extend([slot.next_token])
             if slot.produced >= slot.req.max_new_tokens:
@@ -443,11 +791,14 @@ class ServeEngine:
             self._plain_step(active, done)
             return
         emitted: Dict[int, List[int]] = {}
+        if self.paged:      # the verify window writes pos..pos+k per slot
+            for i in active:
+                self._ensure_pages(i, self._slots[i].pos + k)
         if self.greedy:
             # fused path: verify + longest-prefix accept + commit in one
             # dispatch; the host pulls (B, k+1) ids + (B,) advances
             ids_dev, adv_dev, self._state = self._verify_greedy(
-                self.params, self._state, toks, caps)
+                self.params, self._st(), toks, caps)
             ids = np.asarray(ids_dev)
             adv = np.asarray(adv_dev)
             for i in active:
@@ -460,7 +811,7 @@ class ServeEngine:
             # two-phase path: sampling slots need the host-side rejection
             # test, so acceptance happens between verify and commit
             ids_dev, logits, self._state, rec = self._verify(
-                self.params, self._state, toks)
+                self.params, self._st(), toks)
             sampling = any(self._slots[i].rng is not None for i in active)
             ids = np.asarray(ids_dev)                         # (B, k+1)
             rows = (np.asarray(logits.astype(jnp.float32))    # (B, k+1, V)
@@ -477,7 +828,7 @@ class ServeEngine:
                 emitted[i] = out
                 self.metrics["draft_tokens"] += len(drafts[i])
                 self.metrics["draft_accepted"] += len(out) - 1
-            self._state = self._commit(self._state, rec, advance)
+            self._state = self._commit(self._st(), rec, advance)
         self.metrics["decode_steps"] += 1
         self.metrics["spec_steps"] += 1
         self.metrics["decode_tokens"] += sum(len(v) for v in emitted.values())
@@ -490,6 +841,21 @@ class ServeEngine:
             slot.session.extend(out)
             slot.produced += len(out)
             slot.next_token = out[-1]
+            old_pos = slot.pos
+            slot.pos += len(out)
+            if self.paged and self.allocator is not None:
+                # spec rollback returns blocks: pages allocated for the
+                # verify window but unreached by the committed advance go
+                # straight back to the pool (their rejected writes are
+                # dead — those positions recompute on a later step)
+                sentinel = self.allocator.num_blocks
+                last_ens = min(old_pos + k, self.max_seq - 1) \
+                    // self.page_size
+                for p in range(slot.pos // self.page_size + 1,
+                               last_ens + 1):
+                    if self._tables[i, p] != sentinel:
+                        self.allocator.free(int(self._tables[i, p]))
+                        self._tables[i, p] = sentinel
             if slot.produced >= slot.req.max_new_tokens:
                 self._retire(i, slot, done)
 
@@ -506,7 +872,7 @@ class ServeEngine:
         cfg = self.model.cfg
         b = self.max_batch
         if self._state is None:
-            self._state = self.model.init_slot_state(b, self.max_seq)
+            self._state = self.ops.init_slot_state(b, self.max_seq)
         # events and the averaged metrics (queue_wait_s, slot_occupancy)
         # describe this call's trace; the token/step counters accumulate
         # over the engine lifetime.
@@ -529,7 +895,19 @@ class ServeEngine:
             while (queue and len(group) < len(free)
                    and queue[0].arrival_s <= now_rel):
                 group.append(queue.popleft())
-            if group:
+            if group and self.paged:
+                # extend-admission; requests the pool cannot hold yet go
+                # back to the queue head (order preserved) and wait for a
+                # retirement to return blocks
+                leftover = self._admit_paged(group, free, done)
+                for r in reversed(leftover):
+                    queue.appendleft(r)
+                if (leftover and len(leftover) == len(group)
+                        and not any(s is not None for s in self._slots)):
+                    raise RuntimeError(
+                        "block pool exhausted: no queued request fits "
+                        "with every slot idle; raise num_blocks")
+            elif group:
                 self._admit(group, free, done)
 
             active = [i for i, s in enumerate(self._slots) if s is not None]

@@ -240,5 +240,29 @@ def test_gang_engine_still_serves(served):
     assert all(len(r.output) == r.max_new_tokens for r in done)
 
 
+def test_paged_backend_matches_single_stream(served):
+    """The paged block-pool backend is a pure layout change: per-request
+    outputs stay bit-identical to the unbatched single-stream oracle, and
+    every block returns to the free list once the trace drains (see
+    tests/test_paged_cache.py for the prefix-cache contract)."""
+    from repro.configs import CacheSpec
+    from repro.runtime.serve_loop import ServeConfig
+
+    cfg, model, params = served("glm4-9b")
+    engine = ServeEngine(model, params, ServeConfig(
+        max_batch=4, max_seq=MAX_SEQ, prefix_cache=False,
+        cache=CacheSpec(paged=True, page_size=8)))
+    reqs = _mixed_requests(cfg, lens=[5, 11, 16, 3, 24, 8],
+                           max_news=[4, 9, 2, 12, 1, 6])
+    done = engine.serve(reqs)
+    assert len(done) == len(reqs)
+    for r in done:
+        ref = _single_stream(model, params, r.prompt, r.max_new_tokens)
+        assert list(r.output) == ref, r.rid
+    engine.allocator.assert_balanced()
+    assert engine.allocator.used_blocks == 0
+    assert (engine._tables == engine.allocator.num_blocks).all()
+
+
 def test_next_pow2():
     assert [next_pow2(n) for n in (1, 2, 3, 8, 9, 31)] == [1, 2, 4, 8, 16, 32]

@@ -336,6 +336,29 @@ def test_no_draft_fallback_zero_verify_dispatches(served):
         assert list(r.output) == ref
 
 
+def test_paged_spec_greedy_bitexact_and_rollback_frees(served):
+    """Spec decode on the paged backend: greedy outputs stay bit-exact to
+    plain decode, and pages grown ahead of the frontier for rejected draft
+    positions are returned to the pool (spec rollback frees blocks)."""
+    from repro.configs import CacheSpec
+    from repro.runtime.serve_loop import ServeConfig
+
+    cfg, model, params, dec = served("glm4-9b")
+    engine = ServeEngine(model, params, ServeConfig(
+        max_batch=2, max_seq=MAX_SEQ, spec_k=4, prefix_cache=False,
+        cache=CacheSpec(paged=True, page_size=8)))
+    reqs = _mixed_requests(cfg, lens=[5, 14, 9], max_news=[12, 6, 10])
+    done = engine.serve(reqs)
+    assert len(done) == len(reqs)
+    for r in done:
+        ref = _single_stream(model, params, dec, r.prompt, r.max_new_tokens)
+        assert list(r.output) == ref, r.rid
+    assert engine.metrics["spec_steps"] >= 0
+    engine.allocator.assert_balanced()
+    assert engine.allocator.used_blocks == 0
+    assert (engine._tables == engine.allocator.num_blocks).all()
+
+
 def test_rejection_sampling_matches_plain_distribution(served):
     """The spec acceptance rule must leave the emitted-token marginal
     exactly the plain sampling distribution p: accept the (deterministic)
