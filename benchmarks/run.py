@@ -31,6 +31,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
                   ``BENCH_paged.json`` and fails on greedy divergence.
                   Full replay: ``python -m benchmarks.serve_bench
                   --paged``.
+  * chaos_*     - kill/restore recovery cost (smoke): injected worker
+                  death mid-trace, supervisor restores the last slot
+                  snapshot; writes ``BENCH_chaos.json`` and fails if the
+                  recovered outputs diverge from the undisturbed run.
 """
 from __future__ import annotations
 
@@ -40,7 +44,7 @@ import traceback
 
 
 SUITE_NAMES = ("pareto", "mac", "caesar", "accuracy", "roofline", "tune",
-               "grads", "serve", "spec", "quant", "paged")
+               "grads", "serve", "spec", "quant", "paged", "chaos")
 
 
 def main(argv=None):
@@ -65,6 +69,7 @@ def main(argv=None):
         "spec": serve_bench.run_spec,
         "quant": quant_bench.run,
         "paged": serve_bench.run_paged,
+        "chaos": serve_bench.run_chaos,
     }
     only = args.only or args.suite
     if only:

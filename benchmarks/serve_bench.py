@@ -355,6 +355,75 @@ def sweep_paged(smoke: bool = False, out_path: Optional[str] = None,
     return report
 
 
+def sweep_chaos(smoke: bool = False, out_path: Optional[str] = None,
+                arch: str = "glm4-9b", n_requests: Optional[int] = None,
+                max_batch: int = 4, max_seq: int = 64, kill_at: int = 6,
+                snapshot_every: int = 3, seed: int = 0) -> Dict[str, Any]:
+    """Kill/restore recovery cost on the mixed trace.
+
+    Replays the trace twice: undisturbed, then under a supervisor with an
+    injected worker death at decode step ``kill_at`` (snapshot cadence
+    ``snapshot_every``).  Reports snapshot/restore latency, the wall-clock
+    recovery overhead, and — the contract the chaos tests enforce —
+    whether every request completed bit-identically to the undisturbed
+    run.
+    """
+    import tempfile
+
+    from repro.runtime.supervisor import ServeSupervisor
+
+    cfg = get_arch(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    n = n_requests if n_requests is not None else (12 if smoke else 32)
+
+    plain = ServeEngine(model, params,
+                        ServeConfig(max_batch=max_batch, max_seq=max_seq))
+    plain_stats = _replay(plain, make_trace(cfg, n, seed=seed))
+    ref = {r.rid: list(r.output) for r in plain._done_live}
+
+    with tempfile.TemporaryDirectory() as snapdir:
+        def factory(incarnation):
+            return ServeEngine(model, params, ServeConfig(
+                max_batch=max_batch, max_seq=max_seq,
+                snapshot_dir=snapdir, snapshot_every=snapshot_every,
+                kill_at_step=kill_at if incarnation == 0 else None))
+
+        sup = ServeSupervisor(factory)
+        t0 = time.perf_counter()
+        done = sup.run(make_trace(cfg, n, seed=seed))
+        chaos_wall = time.perf_counter() - t0
+        m = sup.engine.metrics
+        got = {r.rid: list(r.output) for r in done}
+        chaos_stats = {
+            "wall_s": round(chaos_wall, 3),
+            "restarts": len(sup.history),
+            "resumed": len(sup.history[0].resumed_rids),
+            "replayed": len(sup.history[0].replayed_rids),
+            "recovered": len(sup.history[0].recovered_rids),
+            "snapshots": int(m["snapshots"]),
+            "snapshot_ms_mean": round(
+                1e3 * m["snapshot_s"] / max(m["snapshots"], 1), 1),
+            "restore_ms": round(1e3 * m["restore_s"], 1),
+        }
+
+    report = {
+        "meta": {**tuning.version_stamp(), "smoke": smoke, "arch": arch,
+                 "max_batch": max_batch, "max_seq": max_seq,
+                 "n_requests": n, "seed": seed, "kill_at_step": kill_at,
+                 "snapshot_every": snapshot_every},
+        "undisturbed": plain_stats,
+        "chaos": chaos_stats,
+        "recovery_overhead": round(
+            chaos_stats["wall_s"] / max(plain_stats["wall_s"], 1e-9), 3),
+        "bit_identical": got == ref,
+    }
+    if out_path:
+        with open(out_path, "w", encoding="utf-8") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+    return report
+
+
 def run(csv_rows):
     """`benchmarks.run` suite entry: smoke trace, writes BENCH_serving.json."""
     report = sweep(smoke=True, out_path="BENCH_serving.json")
@@ -410,6 +479,29 @@ def run_paged(csv_rows):
     if not report["greedy_match"]:
         raise AssertionError(
             "paged prefix-cached outputs diverged from dense decode")
+
+
+def run_chaos(csv_rows):
+    """`benchmarks.run` chaos suite: kill/restore recovery smoke, writes
+    BENCH_chaos.json; fails if the recovered outputs diverge."""
+    report = sweep_chaos(smoke=True, out_path="BENCH_chaos.json")
+    for name in ("undisturbed", "chaos"):
+        s = report[name]
+        us = (1e6 * s["wall_s"]
+              / max(report["undisturbed"]["delivered_tokens"], 1))
+        csv_rows.append((f"chaos_{name}_{report['meta']['arch']}", us,
+                         f"wall_s={s['wall_s']}"))
+    c = report["chaos"]
+    csv_rows.append((
+        "chaos_recovery", 0.0,
+        f"overhead={report['recovery_overhead']};"
+        f"snapshot_ms={c['snapshot_ms_mean']};"
+        f"restore_ms={c['restore_ms']};resumed={c['resumed']};"
+        f"replayed={c['replayed']};"
+        f"bit_identical={report['bit_identical']}"))
+    if not report["bit_identical"]:
+        raise AssertionError(
+            "chaos-recovered outputs diverged from the undisturbed run")
 
 
 def main(argv=None) -> int:

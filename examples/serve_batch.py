@@ -44,11 +44,24 @@ def main():
     ap.add_argument("--paged", action="store_true",
                     help="paged slot memory + radix prefix cache; replays "
                          "the shared-prefix trace where prefix reuse pays")
+    ap.add_argument("--snapshot-dir", default=None, metavar="DIR",
+                    help="periodic slot snapshots (and, with "
+                         "--kill-at-step, preempt-and-resume)")
+    ap.add_argument("--snapshot-every", type=int, default=8,
+                    metavar="STEPS")
+    ap.add_argument("--kill-at-step", type=int, default=None, metavar="N",
+                    help="chaos demo: kill the worker after decode step N; "
+                         "the supervisor restores the last snapshot and "
+                         "finishes the trace (needs --snapshot-dir)")
     args = ap.parse_args()
     if args.spec and args.gang:
         ap.error("--spec needs the continuous engine (drop --gang)")
     if args.paged and args.gang:
         ap.error("--paged needs the continuous engine (drop --gang)")
+    if args.gang and args.snapshot_dir:
+        ap.error("--snapshot-dir needs the continuous engine (drop --gang)")
+    if args.kill_at_step is not None and not args.snapshot_dir:
+        ap.error("--kill-at-step needs --snapshot-dir to recover from")
 
     cfg = get_arch(args.arch).reduced()
     model = build_model(cfg)
@@ -56,14 +69,23 @@ def main():
     # the draftable spec trace carries longer outputs than the default
     # mixed trace: give its requests room
     max_seq = max(args.max_seq, 128) if args.spec else args.max_seq
+
+    def make_engine(incarnation=0):
+        return ServeEngine(model, params, ServeConfig(
+            max_batch=args.max_batch, max_seq=max_seq, spec_k=args.spec,
+            cache=CacheSpec(paged=True, page_size=8) if args.paged
+            else None,
+            snapshot_dir=args.snapshot_dir,
+            snapshot_every=(args.snapshot_every if args.snapshot_dir
+                            else 0),
+            kill_at_step=(args.kill_at_step if incarnation == 0
+                          else None)))
+
     if args.gang:
         engine = GangServeEngine(model, params, max_batch=args.max_batch,
                                  max_seq=max_seq)
     else:
-        engine = ServeEngine(model, params, ServeConfig(
-            max_batch=args.max_batch, max_seq=max_seq, spec_k=args.spec,
-            cache=CacheSpec(paged=True, page_size=8) if args.paged
-            else None))
+        engine = make_engine()
     # spec mode replays the draftable motif trace — the workload where
     # prompt-lookup drafting earns its verify width; paged mode the
     # shared-prefix trace where the radix cache earns its pages
@@ -71,7 +93,18 @@ def main():
             else make_prefix_trace(cfg, args.requests) if args.paged
             else make_trace(cfg, args.requests))
     t0 = time.time()
-    done = engine.serve(reqs)
+    if args.kill_at_step is not None:
+        from repro.runtime.supervisor import ServeSupervisor
+        sup = ServeSupervisor(make_engine)
+        done = sup.run(reqs)
+        engine = sup.engine
+        for h in sup.history:
+            print(f"chaos: restart {h.restart} restored step "
+                  f"{h.restored_step}; resumed {h.resumed_rids}, "
+                  f"replayed {h.replayed_rids}, recovered "
+                  f"{h.recovered_rids}")
+    else:
+        done = engine.serve(reqs)
     dt = time.time() - t0
     lat = [1e3 * (r.done_at - r.submitted_at) for r in done]
     toks = sum(len(r.output) for r in done)
@@ -95,6 +128,10 @@ def main():
               f"{engine.metrics['prefix_hit_tokens']:.0f} tok "
               f"(computed {engine.metrics['prefill_tokens']:.0f}), "
               f"peak blocks {engine.metrics['peak_blocks']:.0f}")
+    if args.snapshot_dir:
+        print(f"  snapshots: {engine.metrics['snapshots']:.0f} taken "
+              f"({engine.metrics['snapshot_s'] * 1e3:.0f} ms total), "
+              f"restore {engine.metrics['restore_s'] * 1e3:.0f} ms")
 
 
 if __name__ == "__main__":

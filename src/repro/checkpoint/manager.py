@@ -84,6 +84,12 @@ class CheckpointManager:
                     json.dump(meta, f)
                     f.flush()
                     os.fsync(f.fileno())
+                # os.replace cannot overwrite a non-empty directory; a
+                # re-save at the same step (e.g. a serve snapshot retaken
+                # at an unchanged decode step after restart) replaces the
+                # committed dir wholesale.
+                if os.path.isdir(final):
+                    shutil.rmtree(final)
                 os.replace(tmp, final)       # the atomic commit point
                 self._gc()
             except BaseException as e:       # surfaced on next save/wait
@@ -164,6 +170,34 @@ class CheckpointManager:
                               if hasattr(tleaf, "dtype") else jnp.asarray(arr))
         return jax.tree_util.tree_unflatten(
             jax.tree_util.tree_structure(template), leaves)
+
+    def load_arrays(self, step: Optional[int] = None
+                    ) -> "tuple[Dict[str, np.ndarray], Dict[str, Any]]":
+        """Load a checkpoint as a flat ``{path_key: ndarray}`` dict + meta.
+
+        The template-free restore path: callers that saved a flat dict of
+        host arrays (the serving snapshot) get back exactly what they
+        stored — dtype sidecar applied (bf16 etc. un-viewed), no jax
+        placement, no structure to pre-build.
+        """
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        path = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+        dtypes = meta.get("dtypes", {})
+        out: Dict[str, np.ndarray] = {}
+        with np.load(os.path.join(path, "arrays.npz")) as arrays:
+            for key in arrays.files:
+                arr = arrays[key]
+                want = dtypes.get(key)
+                if want and str(arr.dtype) != want:
+                    import ml_dtypes
+                    arr = arr.view(np.dtype(getattr(ml_dtypes, want)))
+                out[key] = arr
+        return out, meta
 
     def metadata(self, step: Optional[int] = None) -> Dict[str, Any]:
         step = step if step is not None else self.latest_step()

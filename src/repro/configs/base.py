@@ -208,6 +208,35 @@ class ArchConfig:
     def supports_long_context(self) -> bool:
         return self.family in ("ssm", "hybrid")
 
+    def fingerprint(self) -> Dict[str, object]:
+        """Serving-identity descriptor for snapshot compatibility.
+
+        Two configs with equal fingerprints produce byte-compatible
+        decode-state leaves (same shapes, dtypes and compute), so a slot
+        snapshot taken under one restores bit-identically under the
+        other.  Deliberately *excludes* engine capacity (``max_batch``,
+        pool size) — snapshots restore into differently-sized engines —
+        and includes everything that alters per-token state or logits:
+        architecture dims, family, execution policy tag, and the
+        resolved cache format.
+        """
+        spec = self.cache_spec()
+        return {
+            "name": self.name, "family": self.family,
+            "n_layers": self.n_layers, "d_model": self.d_model,
+            "n_heads": self.n_heads, "n_kv_heads": self.n_kv_heads,
+            "d_ff": self.d_ff, "vocab_size": self.vocab_size,
+            "head_dim": self.head_dim_, "rope_theta": self.rope_theta,
+            "ssm_state": self.ssm_state, "ssm_conv": self.ssm_conv,
+            "sliding_window": self.sliding_window,
+            "global_attn_every": self.global_attn_every,
+            "n_experts": self.n_experts, "top_k": self.top_k,
+            "activation": self.activation, "dtype": self.dtype,
+            "exec": self.exec_policy.tag(),
+            "cache": {"dtype": spec.dtype, "block": spec.block,
+                      "paged": spec.paged, "page_size": spec.page_size},
+        }
+
     def scaled(self, **kw) -> "ArchConfig":
         return dataclasses.replace(self, **kw)
 

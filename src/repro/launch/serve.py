@@ -38,26 +38,52 @@ def main(argv=None):
                          "admissions reuse already-prefilled pages")
     ap.add_argument("--page-size", type=int, default=16,
                     help="tokens per cache page (--paged)")
+    ap.add_argument("--snapshot-dir", default=None, metavar="DIR",
+                    help="slot snapshot directory: enables periodic "
+                         "snapshots and (with --kill-at-step) "
+                         "preempt-and-resume")
+    ap.add_argument("--snapshot-every", type=int, default=8,
+                    metavar="STEPS",
+                    help="snapshot cadence in decode steps (--snapshot-dir)")
+    ap.add_argument("--kill-at-step", type=int, default=None, metavar="N",
+                    help="chaos: kill the worker after decode step N and "
+                         "let the supervisor restore + resume (needs "
+                         "--snapshot-dir)")
     args = ap.parse_args(argv)
     if args.spec and args.gang:
         ap.error("--spec needs the continuous engine (drop --gang)")
     if args.paged and args.gang:
         ap.error("--paged needs the continuous engine (drop --gang)")
+    if args.gang and args.snapshot_dir:
+        ap.error("--snapshot-dir needs the continuous engine (drop --gang)")
+    if args.kill_at_step is not None and not args.snapshot_dir:
+        ap.error("--kill-at-step needs --snapshot-dir to recover from")
 
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
+    cache = (CacheSpec(paged=True, page_size=args.page_size)
+             if args.paged else None)
+
+    def make_engine(incarnation=0):
+        # only the first incarnation carries the injected fault: the
+        # respawn must run the trace to completion
+        return ServeEngine(model, params, ServeConfig(
+            max_batch=args.max_batch, max_seq=args.max_seq,
+            spec_k=args.spec, cache=cache,
+            snapshot_dir=args.snapshot_dir,
+            snapshot_every=(args.snapshot_every if args.snapshot_dir
+                            else 0),
+            kill_at_step=(args.kill_at_step if incarnation == 0
+                          else None)))
+
     if args.gang:
         engine = GangServeEngine(model, params, max_batch=args.max_batch,
                                  max_seq=args.max_seq)
     else:
-        cache = (CacheSpec(paged=True, page_size=args.page_size)
-                 if args.paged else None)
-        engine = ServeEngine(model, params, ServeConfig(
-            max_batch=args.max_batch, max_seq=args.max_seq,
-            spec_k=args.spec, cache=cache))
+        engine = make_engine()
     rng = np.random.default_rng(args.seed)
     reqs = []
     for i in range(args.requests):
@@ -68,7 +94,18 @@ def main(argv=None):
             prompt = rng.standard_normal((n, cfg.d_model)).astype(np.float32)
         reqs.append(Request(i, prompt, max_new_tokens=args.max_new))
     t0 = time.time()
-    done = engine.serve(reqs)
+    if args.kill_at_step is not None:
+        from repro.runtime.supervisor import ServeSupervisor
+        sup = ServeSupervisor(make_engine)
+        done = sup.run(reqs)
+        engine = sup.engine
+        for h in sup.history:
+            print(f"# chaos: restart {h.restart} restored step "
+                  f"{h.restored_step}; resumed {h.resumed_rids}, "
+                  f"replayed {h.replayed_rids}, recovered "
+                  f"{h.recovered_rids}")
+    else:
+        done = engine.serve(reqs)
     dt = time.time() - t0
     for r in done:
         print(f"req {r.rid}: prompt {len(r.prompt)} toks -> "
@@ -90,6 +127,10 @@ def main(argv=None):
               f"{engine.metrics['spec_acceptance']:.0%}, "
               f"{engine.metrics['tokens_per_step']:.2f} tokens/step over "
               f"{engine.metrics['decode_steps']:.0f} steps")
+    if args.snapshot_dir:
+        print(f"# snapshots: {engine.metrics['snapshots']:.0f} taken "
+              f"({engine.metrics['snapshot_s'] * 1e3:.0f} ms total), "
+              f"restore {engine.metrics['restore_s'] * 1e3:.0f} ms")
     return 0
 
 

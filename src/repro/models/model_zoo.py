@@ -49,6 +49,20 @@ class CacheOps(Protocol):
         length and roll recurrent state back to its checkpoint.  Also the
         second half of a paged admission (``advance = suffix lengths``).
 
+    ``slot_extract(state, slots)``
+        Snapshot gather — the scatter seam read in reverse.  Returns the
+        per-slot leaves at slot indices in their **raw storage dtype**
+        (int8 state and its scale leaves verbatim), because a restored
+        request must resume bit-identically.  The paged backend returns
+        only ``pos`` + recurrent leaves; pool pages travel via the
+        host-side block tables.
+
+    ``slot_restore(state, slots, pos_values, rec)``
+        Raw-dtype restore of per-slot ``pos`` + recurrent leaves — the
+        write half of the snapshot seam.  Unlike ``slot_reset`` (whose
+        ``rec`` is exact-f32 and re-quantizes on load), leaves land
+        verbatim.
+
     ``paged`` / ``spec`` describe the backend for the engine's planning
     (block accounting lives host-side in ``runtime/block_pool.py``).
     """
@@ -63,6 +77,10 @@ class CacheOps(Protocol):
     def slot_reset(self, state, slots, pos_values, rec=None): ...
 
     def spec_commit(self, state, rec_stack, advance): ...
+
+    def slot_extract(self, state, slots): ...
+
+    def slot_restore(self, state, slots, pos_values, rec): ...
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,6 +105,12 @@ class DenseCacheOps:
 
     def spec_commit(self, state, rec_stack, advance):
         return T.spec_commit(state, rec_stack, advance)
+
+    def slot_extract(self, state, slots):
+        return T.slot_extract(state, slots)
+
+    def slot_restore(self, state, slots, pos_values, rec):
+        return PG.slot_restore(state, slots, pos_values, rec)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -123,6 +147,12 @@ class PagedCacheOps:
 
     def spec_commit(self, state, rec_stack, advance):
         return T.spec_commit(state, rec_stack, advance)
+
+    def slot_extract(self, state, slots):
+        return PG.slot_extract(state, slots)
+
+    def slot_restore(self, state, slots, pos_values, rec):
+        return PG.slot_restore(state, slots, pos_values, rec)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -263,6 +293,12 @@ class Model:
         indices >= max_batch are dropped (admission-group padding).
         """
         return T.slot_update(state, sub, slots)
+
+    def slot_extract(self, state, slots):
+        """Gather per-slot state rows at slot indices — the scatter seam
+        read in reverse, used by the serving snapshot.  Leaves come back
+        in their raw storage dtype so a restore is bit-identical."""
+        return T.slot_extract(state, slots)
 
     # -- inputs -------------------------------------------------------------
     def input_specs(self, batch: int, seq: int, kind: str = "train"

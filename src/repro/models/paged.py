@@ -136,6 +136,52 @@ _REC_SNAPSHOT = ("x_prev", "cm_prev", "wkv", "conv_tail", "ssm_h")
 _SCALE_FOR = {"wkv": "wkv_scale", "ssm_h": "ssm_scale"}
 
 
+def slot_extract(state: PagedDecodeState, slots: Array) -> PagedDecodeState:
+    """Gather the per-slot (non-pooled) leaves at slot indices.
+
+    The paged snapshot seam: ``pos`` and the dense-per-slot recurrent
+    leaves (raw dtype — int8 state and its scale leaves verbatim) come
+    back shaped ``(L, G, ...)``; the K/V pools and block tables are left
+    ``None`` because they are not per-slot arrays — the engine snapshots
+    the block-table rows (host-authoritative) plus only the pool blocks
+    those rows reference.
+    """
+    slots = jnp.asarray(slots, jnp.int32)
+    out: Dict[str, Any] = {name: None for name in PagedDecodeState._fields}
+    out["pos"] = state.pos[slots]
+    for name in _REC_SNAPSHOT + ("wkv_scale", "ssm_scale"):
+        leaf = getattr(state, name)
+        if leaf is not None:
+            out[name] = leaf[:, slots]
+    return PagedDecodeState(**out)
+
+
+def slot_restore(state, slots: Array, pos_values: Array,
+                 rec: Dict[str, Array]):
+    """Raw-dtype restore of per-slot ``pos`` + recurrent leaves.
+
+    Unlike :func:`slot_reset` — whose ``rec`` is an exact-f32 prefix
+    snapshot that int8 states *re-quantize* on load — ``rec`` here holds
+    leaves already in their storage dtype (int8 state plus its scale
+    leaves as separate entries), written back verbatim: a restored
+    request must resume **bit-identically**, so the round trip through a
+    snapshot can never be dequant/requant.  Works on either state layout
+    (dense ``DecodeState`` or :class:`PagedDecodeState`); out-of-range
+    slot indices drop, as everywhere on the scatter seam.
+    """
+    slots = jnp.asarray(slots, jnp.int32)
+    out: Dict[str, Any] = {
+        "pos": state.pos.at[slots].set(
+            jnp.asarray(pos_values, state.pos.dtype), mode="drop")}
+    for name, src in rec.items():
+        tgt = getattr(state, name)
+        if tgt is None:
+            raise ValueError(f"slot_restore: state has no leaf {name!r}")
+        out[name] = tgt.at[:, slots].set(jnp.asarray(src, tgt.dtype),
+                                         mode="drop")
+    return state._replace(**out)
+
+
 def slot_reset(state: PagedDecodeState, slots: Array, pos_values: Array,
                rec: Optional[Dict[str, Array]] = None) -> PagedDecodeState:
     """Reset admitted slots: per-row ``pos`` plus recurrent-state loads.

@@ -747,6 +747,32 @@ def slot_update(state: DecodeState, sub: DecodeState, slots: Array
     return DecodeState(**out)
 
 
+def slot_extract(state: DecodeState, slots: Array) -> DecodeState:
+    """Gather per-slot state rows at slot indices — the inverse of
+    :func:`slot_update`, and the serving snapshot's extract seam.
+
+    ``slots`` (G,) picks rows along the batch axis (axis 1 under the
+    stacked layers axis; axis 0 for ``pos``) of every present leaf; the
+    result is a sub-state shaped exactly like a prefill's output for G
+    requests, so ``slot_update(state, slot_extract(state, slots), slots)``
+    is an identity and a snapshot restores through the same scatter that
+    admissions use.  Leaves come back **raw** (int8 cache leaves and
+    their scale leaves verbatim) — restore must be bit-identical, never a
+    dequant/requant round trip.
+    """
+    slots = jnp.asarray(slots, jnp.int32)
+    out: Dict[str, Any] = {}
+    for name in DecodeState._fields:
+        leaf = getattr(state, name)
+        if leaf is None:
+            out[name] = None
+        elif name == "pos":
+            out[name] = leaf[slots]
+        else:
+            out[name] = leaf[:, slots]
+    return DecodeState(**out)
+
+
 # ---------------------------------------------------------------------------
 # Speculative decode: k+1-position verify with variable per-row commit
 # ---------------------------------------------------------------------------

@@ -26,6 +26,16 @@ import time
 from typing import Callable, Dict, List, Optional, Tuple
 
 
+class WorkerKilled(RuntimeError):
+    """A worker died mid-run (real preemption or an injected fault).
+
+    Raised by the serve loop's fault-injection hook
+    (``ServeConfig.kill_at_step``) and caught by supervisors
+    (:class:`TrainSupervisor`, ``runtime/supervisor.ServeSupervisor``) —
+    anything else propagating it is a genuine crash.
+    """
+
+
 @dataclasses.dataclass
 class WorkerState:
     last_beat: float
@@ -45,6 +55,20 @@ class HeartbeatMonitor:
         self.workers[worker].last_beat = (now if now is not None
                                           else self._clock())
         self.workers[worker].alive = True
+
+    def add_worker(self, worker: str, now: Optional[float] = None):
+        """Register a worker spawned after construction (a respawn gets a
+        fresh beat — it is not born dead from its predecessor's silence)."""
+        self.workers[worker] = WorkerState(
+            last_beat=now if now is not None else self._clock())
+
+    def mark_dead(self, worker: str):
+        """Record an externally-confirmed death (e.g. a caught
+        :class:`WorkerKilled`) without waiting out the timeout."""
+        st = self.workers.get(worker)
+        if st is not None:
+            st.alive = False
+            st.last_beat = float("-inf")
 
     def dead_workers(self, now: Optional[float] = None) -> List[str]:
         now = now if now is not None else self._clock()

@@ -46,17 +46,25 @@ import collections
 import dataclasses
 import time
 import warnings
-from typing import Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.manager import CheckpointManager
 from repro.configs.base import CacheSpec
 from repro.kernels import common as kernel_common
 from repro.models.model_zoo import Model
+from repro.parallel.fault_tolerance import WorkerKilled
 from repro.runtime.block_pool import BlockAllocator, RadixCache
 from repro.runtime.drafter import Drafter, DraftSession, NGramDrafter
+
+# Serving snapshot format version (bumped on any layout/meta change; a
+# restore refuses snapshots it does not understand instead of guessing).
+SNAPSHOT_VERSION = 1
+
+ADMISSION_POLICIES = ("reject-new", "shed-oldest", "shed-lowest-budget")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,6 +87,25 @@ class ServeConfig:
       * ``prefix_cache`` keeps a radix trie over admitted prompts so an
         admission sharing a full-page prefix with earlier traffic
         references those blocks instead of recomputing them.
+
+    Robustness knobs (all off by default — the engine's historical
+    contract, "every request is served, over-budget raises", holds
+    untouched unless a knob turns a policy on):
+
+      * ``max_queue`` bounds the *arrived-but-unadmitted* queue;
+        ``admission_policy`` picks the victim when it overflows —
+        ``"reject-new"`` sheds the newcomer, ``"shed-oldest"`` sheds the
+        longest-waiting entry, ``"shed-lowest-budget"`` sheds the
+        smallest ``max_new_tokens`` (cheapest work to redo elsewhere).
+        Shed requests come back with ``status="shed"`` and empty output.
+      * ``snapshot_dir`` + ``snapshot_every`` persist an atomic, versioned
+        slot snapshot every N decode steps (see :meth:`ServeEngine.snapshot`);
+        a fresh engine restores it and resumed requests complete
+        bit-identically.
+      * ``kill_at_step`` injects a fault: the serve loop raises
+        :class:`~repro.parallel.fault_tolerance.WorkerKilled` after that
+        decode step, abandoning live state exactly like a preempted host
+        (the chaos-harness hook; see ``runtime/supervisor.py``).
     """
 
     max_batch: int = 8
@@ -91,6 +118,12 @@ class ServeConfig:
     cache: Optional[CacheSpec] = None
     num_blocks: Optional[int] = None
     prefix_cache: bool = True
+    # backpressure / fault tolerance
+    max_queue: Optional[int] = None
+    admission_policy: str = "reject-new"
+    snapshot_dir: Optional[str] = None
+    snapshot_every: int = 0
+    kill_at_step: Optional[int] = None
 
     def __post_init__(self):
         if self.max_batch < 1:
@@ -109,6 +142,21 @@ class ServeConfig:
         if self.num_blocks is not None and self.num_blocks < 1:
             raise ValueError(f"num_blocks must be >= 1, got "
                              f"{self.num_blocks}")
+        if self.max_queue is not None and self.max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got "
+                             f"{self.max_queue}")
+        if self.admission_policy not in ADMISSION_POLICIES:
+            raise ValueError(f"admission_policy must be one of "
+                             f"{ADMISSION_POLICIES}, got "
+                             f"{self.admission_policy!r}")
+        if self.snapshot_every < 0:
+            raise ValueError(f"snapshot_every must be >= 0, got "
+                             f"{self.snapshot_every}")
+        if self.snapshot_every and self.snapshot_dir is None:
+            raise ValueError("snapshot_every > 0 needs a snapshot_dir")
+        if self.kill_at_step is not None and self.kill_at_step < 1:
+            raise ValueError(f"kill_at_step must be >= 1, got "
+                             f"{self.kill_at_step}")
 
 
 @dataclasses.dataclass
@@ -121,7 +169,14 @@ class Request:
     temperature: float = 0.0      # 0 => greedy
     top_k: int = 0                # 0 => full distribution
     seed: int = 0
+    # wall-clock budget from submission; None = wait forever.  An expired
+    # waiting request sheds; an expired *live* request retires gracefully
+    # with whatever it produced (status "timeout", partial output).
+    deadline_s: Optional[float] = None
     output: Optional[np.ndarray] = None
+    # terminal disposition: "done" (full budget), "shed" (backpressure
+    # victim, empty output), "timeout" (deadline expired)
+    status: str = "pending"
     submitted_at: float = 0.0     # absolute arrival time
     admitted_at: float = 0.0      # absolute prefill time
     done_at: float = 0.0
@@ -141,6 +196,28 @@ class _Slot:
     # host mirror of the device-side committed position (tokens in cache);
     # drives paged-mode page allocation ahead of each step's writes
     pos: int = 0
+
+
+@dataclasses.dataclass
+class _Parked:
+    """A snapshotted in-flight request awaiting re-admission.
+
+    Produced by :meth:`ServeEngine.restore_snapshot`; consumed by
+    ``_admit_restored`` when the serve loop reaches the request's rid.
+    ``leaves`` hold the per-slot state in raw storage dtype (dense KV
+    trimmed to ``pos`` tokens; recurrent + scale leaves as stored);
+    ``pages`` hold the referenced pool blocks per leaf (paged mode),
+    denormalized per request — restored slots never share pages, even
+    where the dead engine's radix cache had them shared (identical bytes
+    either way, so resumed decoding is unaffected).
+    """
+    tokens: List[int]
+    next_token: int
+    produced: int
+    pos: int
+    rng_state: Optional[dict]
+    leaves: Dict[str, np.ndarray]
+    pages: Dict[str, np.ndarray]
 
 
 def next_pow2(n: int) -> int:
@@ -306,6 +383,13 @@ class ServeEngine:
             self.trace_counts["verify"] += 1
             return model.verify_commit_greedy(p, st, {"tokens": toks}, caps)
 
+        def _slot_restore_fn(st, slots, pos_values, rec):
+            # snapshot restore: raw-dtype pos + recurrent-leaf scatter
+            # (bucket-padded to max_batch rows, sentinel rows drop — one
+            # trace per engine, same discipline as _reset)
+            self.trace_counts["restore"] += 1
+            return self.ops.slot_restore(st, slots, pos_values, rec)
+
         self._prefill = jax.jit(_prefill_fn)
         # the old slot state is dead the moment a step returns: donate it
         # so XLA updates the caches in place (donation is a no-op warning
@@ -325,6 +409,8 @@ class ServeEngine:
                                donate_argnums=(0,) if donate else ())
         self._verify_greedy = jax.jit(_verify_greedy_fn,
                                       donate_argnums=(1,) if donate else ())
+        self._slot_restore = jax.jit(_slot_restore_fn,
+                                     donate_argnums=(0,) if donate else ())
         # slot state allocates lazily on the first serve(): construction
         # stays cheap (warm boot = load the tuned table, nothing else)
         self._state = None
@@ -349,11 +435,31 @@ class ServeEngine:
             # (prefill compute that never ran) and the block pool's
             # high-water mark (resident cache memory in pages)
             "prefix_hit_tokens": 0, "peak_blocks": 0,
+            # backpressure + fault tolerance: arrived-but-unadmitted queue
+            # depth (instantaneous / high-water), shed + deadline-expired
+            # request counts, snapshot/restore work
+            "queue_depth": 0, "peak_queue_depth": 0,
+            "shed_count": 0, "timeout_count": 0,
+            "snapshots": 0, "snapshot_s": 0.0, "restore_s": 0.0,
         }
         self._occ_num = 0
         self._occ_den = 0
         self._wait_sum = 0.0
         self._n_done = 0
+        # -- fault tolerance -----------------------------------------------
+        # snapshotted requests awaiting re-admission (rid -> _Parked)
+        self._parked: Dict[int, _Parked] = {}
+        # serve()'s live queues, lifted to attributes so a mid-trace
+        # snapshot can persist not-yet-admitted and finished requests too
+        self._pending: collections.deque = collections.deque()
+        self._waiting: collections.deque = collections.deque()
+        self._done_live: List[Request] = []
+        self._ckpt: Optional[CheckpointManager] = None
+        self._kill_fired = False
+        self._last_snap_step = -1
+        # supervisor hook: called once per serve-loop iteration (e.g.
+        # HeartbeatMonitor.beat bound to this worker's name)
+        self.heartbeat: Optional[Callable[[], None]] = None
 
     # -- scheduling ---------------------------------------------------------
 
@@ -361,6 +467,19 @@ class ServeEngine:
         return min(max(self.min_bucket, next_pow2(n)), self._bucket_cap)
 
     def _validate(self, requests: List[Request]) -> None:
+        # rids key scheduling events, snapshot/restore and re-admission;
+        # a duplicate would silently corrupt accounting, so refuse early.
+        live = {s.req.rid for s in self._slots if s is not None}
+        seen: set = set()
+        for r in requests:
+            if r.rid in seen or r.rid in live:
+                where = "another live request" if r.rid in live \
+                    else "another request in this batch"
+                raise ValueError(
+                    f"duplicate request id {r.rid} (also used by {where}): "
+                    f"request ids key scheduling, snapshot/restore and "
+                    f"re-admission — give every request a unique rid")
+            seen.add(r.rid)
         for r in requests:
             need = len(r.prompt) + r.max_new_tokens
             if need > self.max_seq:
@@ -425,6 +544,8 @@ class ServeEngine:
         r = slot.req
         r.output = np.asarray(slot.tokens[:r.max_new_tokens])
         r.done_at = time.monotonic()
+        if r.status == "pending":       # deadline retire pre-sets "timeout"
+            r.status = "done"
         done.append(r)
         self._n_done += 1
         self.events.append(("retire", r.rid, -1 if i is None else i,
@@ -664,7 +785,8 @@ class ServeEngine:
                                 int(self.metrics["decode_steps"])))
             rng = (np.random.default_rng([r.seed, r.rid])
                    if not self.greedy and r.temperature > 0.0 else None)
-            slot = _Slot(req=r, next_token=0, produced=0, tokens=[], rng=rng)
+            slot = _Slot(req=r, next_token=0, produced=0, tokens=[], rng=rng,
+                         pos=len(r.prompt))
             slot.next_token = self._next_token(slot, j, ids, rows)
             slot.tokens.append(slot.next_token)
             slot.produced = 1
@@ -859,6 +981,428 @@ class ServeEngine:
             if slot.produced >= slot.req.max_new_tokens:
                 self._retire(i, slot, done)
 
+    # -- snapshot / restore --------------------------------------------------
+
+    _KV_LEAVES = ("cache_k", "cache_v", "scale_k", "scale_v")
+
+    def _ckpt_mgr(self) -> CheckpointManager:
+        if self.config.snapshot_dir is None:
+            raise ValueError("snapshot/restore needs ServeConfig."
+                             "snapshot_dir")
+        if self._ckpt is None:
+            # sync save: an async writer would race the host-authoritative
+            # block tables (live numpy) mutating under the next admission
+            self._ckpt = CheckpointManager(self.config.snapshot_dir,
+                                           keep=3, async_save=False)
+        return self._ckpt
+
+    def snapshot(self) -> int:
+        """Persist an atomic, versioned snapshot of every in-flight,
+        queued and finished request; returns the step id (the engine's
+        decode-step counter).
+
+        Per live slot: prompt, emitted tokens, sampling RNG state, and the
+        per-slot state leaves in **raw storage dtype** (int8 + scales
+        verbatim) via the ``slot_extract`` gather seam — dense KV trimmed
+        to ``pos`` tokens; paged KV as the referenced pool pages in
+        logical order (the block table travels implicitly as that
+        ordering).  A fresh engine — any ``max_batch``/pool size with the
+        same model fingerprint — restores it and resumed requests
+        complete bit-identically to an uninterrupted run.
+        """
+        mgr = self._ckpt_mgr()
+        t_start = time.perf_counter()
+        state = self._state
+        if (not self.paged and state is not None
+                and state.cache_k is not None
+                and state.cache_k.shape[2] < self.max_seq):
+            raise ValueError(
+                "cannot snapshot a ring-cache engine (slot cache shorter "
+                "than max_seq): ring positions alias, so a linear per-slot "
+                "extract does not exist (ROADMAP: ring paging is open)")
+        step = int(self.metrics["decode_steps"])
+        arrays: Dict[str, np.ndarray] = {}
+        slots_meta: List[dict] = []
+        live = [(i, s) for i, s in enumerate(self._slots) if s is not None]
+        if live:
+            idx = np.asarray([i for i, _ in live], np.int32)
+            sub = self.ops.slot_extract(state, idx)
+            pos_dev = np.asarray(sub.pos)
+            host: Dict[str, np.ndarray] = {}
+            for name in sub._fields:
+                if name in ("pos", "block_tables"):
+                    continue
+                leaf = getattr(sub, name)
+                if leaf is not None:
+                    host[name] = np.asarray(leaf)
+        for j, (i, slot) in enumerate(live):
+            r = slot.req
+            pos = int(pos_dev[j])
+            arrays[f"slot{j}.prompt"] = np.asarray(r.prompt)
+            arrays[f"slot{j}.tokens"] = np.asarray(slot.tokens, np.int32)
+            for name, arr in host.items():
+                if name in self._KV_LEAVES and not self.paged:
+                    arrays[f"slot{j}.{name}"] = arr[:, j, :pos].copy()
+                else:
+                    arrays[f"slot{j}.{name}"] = arr[:, j].copy()
+            if self.paged and self.allocator is not None:
+                n_used = (pos - 1) // self.page_size + 1
+                ids = np.asarray([int(self._tables[i, p])
+                                  for p in range(n_used)], np.int32)
+                for name in self._KV_LEAVES:
+                    leaf = getattr(state, name)
+                    if leaf is not None:
+                        arrays[f"slot{j}.pages.{name}"] = \
+                            np.asarray(leaf[:, ids])
+            slots_meta.append({
+                "j": j, "rid": r.rid, "produced": slot.produced,
+                "next_token": int(slot.next_token), "pos": pos,
+                "max_new_tokens": r.max_new_tokens,
+                "temperature": r.temperature, "top_k": r.top_k,
+                "seed": r.seed, "deadline_s": r.deadline_s,
+                "rng": (slot.rng.bit_generator.state
+                        if slot.rng is not None else None),
+            })
+        queue_meta: List[dict] = []
+        for qj, r in enumerate(list(self._waiting) + list(self._pending)):
+            arrays[f"queue{qj}.prompt"] = np.asarray(r.prompt)
+            queue_meta.append({
+                "j": qj, "rid": r.rid,
+                "max_new_tokens": r.max_new_tokens,
+                "temperature": r.temperature, "top_k": r.top_k,
+                "seed": r.seed, "deadline_s": r.deadline_s})
+        done_meta: List[dict] = []
+        for dj, r in enumerate(self._done_live):
+            arrays[f"done{dj}.output"] = (
+                np.asarray(r.output) if r.output is not None
+                else np.zeros((0,), np.int32))
+            done_meta.append({"j": dj, "rid": r.rid, "status": r.status})
+        meta = {
+            "snapshot_version": SNAPSHOT_VERSION,
+            "fingerprint": (self.model.cfg.fingerprint()
+                            if getattr(self.model, "cfg", None) is not None
+                            else None),
+            "engine": {"max_batch": self.max_batch,
+                       "max_seq": self.max_seq, "greedy": self.greedy,
+                       "paged": self.paged, "spec_k": self.spec_k,
+                       "page_size": (self.page_size if self.paged
+                                     else None)},
+            "slots": slots_meta, "queue": queue_meta, "done": done_meta,
+        }
+        mgr.save(step, arrays, metadata=meta)
+        self.metrics["snapshots"] += 1
+        self.metrics["snapshot_s"] += time.perf_counter() - t_start
+        return step
+
+    def restore_snapshot(self, step: Optional[int] = None
+                         ) -> Tuple[List[Request], List[Request]]:
+        """Load a snapshot (latest step by default) into this engine;
+        returns ``(requests, completed)``.
+
+        Call on a **fresh** engine, then ``serve(requests)``: snapshotted
+        in-flight requests re-enter through their saved state (parked by
+        rid until the scheduler reaches them — a smaller ``max_batch``
+        simply queues the overflow) and complete bit-identically;
+        snapshotted-but-unadmitted requests re-admit from scratch.
+        ``completed`` carries the dead engine's already-finished requests
+        (outputs + status) for a supervisor to merge by rid.  The model
+        fingerprint and sampling mode must match; capacity may differ as
+        long as each request still fits (``prompt + max_new <= max_seq``,
+        each slot's pages fit the pool).
+        """
+        mgr = self._ckpt_mgr()
+        t_start = time.perf_counter()
+        arrays, meta = mgr.load_arrays(step)
+        if meta.get("snapshot_version") != SNAPSHOT_VERSION:
+            raise ValueError(
+                f"snapshot version {meta.get('snapshot_version')!r} is "
+                f"not supported (this engine speaks {SNAPSHOT_VERSION})")
+        fp = (self.model.cfg.fingerprint()
+              if getattr(self.model, "cfg", None) is not None else None)
+        if meta.get("fingerprint") != fp:
+            raise ValueError(
+                f"snapshot fingerprint mismatch: taken under "
+                f"{meta.get('fingerprint')}, this engine is {fp} — "
+                f"restoring across architectures or cache formats cannot "
+                f"be bit-identical")
+        eng = meta.get("engine", {})
+        if bool(eng.get("greedy")) != bool(self.greedy):
+            raise ValueError("snapshot sampling mode (greedy="
+                             f"{eng.get('greedy')}) differs from this "
+                             f"engine's (greedy={self.greedy})")
+        requests: List[Request] = []
+        for srec in meta.get("slots", []):
+            j = srec["j"]
+            prompt = arrays[f"slot{j}.prompt"]
+            r = Request(rid=srec["rid"], prompt=prompt,
+                        max_new_tokens=srec["max_new_tokens"],
+                        temperature=srec["temperature"],
+                        top_k=srec["top_k"], seed=srec["seed"],
+                        deadline_s=srec.get("deadline_s"))
+            need = len(prompt) + r.max_new_tokens
+            if need > self.max_seq:
+                raise ValueError(
+                    f"restored request {r.rid} needs {need} cache "
+                    f"positions but this engine's max_seq is "
+                    f"{self.max_seq}")
+            leaves: Dict[str, np.ndarray] = {}
+            pages: Dict[str, np.ndarray] = {}
+            pre = f"slot{j}."
+            for key, arr in arrays.items():
+                if not key.startswith(pre):
+                    continue
+                name = key[len(pre):]
+                if name in ("prompt", "tokens"):
+                    continue
+                if name.startswith("pages."):
+                    pages[name[len("pages."):]] = arr
+                else:
+                    leaves[name] = arr
+            if self.paged and self.allocator is not None and pages:
+                n_used = next(iter(pages.values())).shape[1]
+                if n_used > self.allocator.num_blocks:
+                    raise ValueError(
+                        f"restored request {r.rid} holds {n_used} pages "
+                        f"but this engine's pool only has "
+                        f"{self.allocator.num_blocks} blocks; raise "
+                        f"num_blocks")
+            self._parked[r.rid] = _Parked(
+                tokens=[int(t) for t in arrays[f"slot{j}.tokens"]],
+                next_token=int(srec["next_token"]),
+                produced=int(srec["produced"]), pos=int(srec["pos"]),
+                rng_state=srec.get("rng"), leaves=leaves, pages=pages)
+            requests.append(r)
+        for qrec in meta.get("queue", []):
+            requests.append(Request(
+                rid=qrec["rid"], prompt=arrays[f"queue{qrec['j']}.prompt"],
+                max_new_tokens=qrec["max_new_tokens"],
+                temperature=qrec["temperature"], top_k=qrec["top_k"],
+                seed=qrec["seed"], deadline_s=qrec.get("deadline_s")))
+        completed = [
+            Request(rid=drec["rid"], prompt=np.zeros((0,), np.int32),
+                    output=arrays[f"done{drec['j']}.output"],
+                    status=drec.get("status", "done"))
+            for drec in meta.get("done", [])]
+        self.metrics["restore_s"] += time.perf_counter() - t_start
+        return requests, completed
+
+    def _admit_restored(self, group: List[Request], free: List[int],
+                        done: List[Request]) -> List[Request]:
+        """Re-admit parked (snapshot-restored) requests into free slots;
+        returns requests deferred for lack of pool blocks (paged only).
+
+        Dense engines rebuild a bucket-padded sub-state from the stored
+        raw leaves and reuse the ``_insert`` scatter program (the same
+        trace a prefill admission of that bucket uses — restore never
+        retraces a warm engine).  Paged engines allocate fresh blocks,
+        write the stored pages back with fixed-shape *eager* pool updates
+        (nothing traced), and scatter pos + recurrent leaves through the
+        one jitted ``slot_restore`` program.
+        """
+        t_start = time.perf_counter()
+        b = self.max_batch
+        entries = [(r, self._parked[r.rid]) for r in group]
+        leftover: List[Request] = []
+        placed: List[tuple] = []
+        if self.paged:
+            free_iter = iter(free)
+            for r, e in entries:
+                new_ids: List[int] = []
+                if self.allocator is not None:
+                    n_used = (e.pos - 1) // self.page_size + 1
+                    dry = False
+                    for _ in range(n_used):
+                        blk = self._alloc_block()
+                        if blk is None:
+                            dry = True
+                            break
+                        new_ids.append(blk)
+                    if dry:           # roll back, requeue, keep going
+                        for blk in new_ids:
+                            self.allocator.free(blk)
+                        leftover.append(r)
+                        continue
+                slot_i = next(free_iter)
+                if self.allocator is not None:
+                    for p, blk in enumerate(new_ids):
+                        self._tables[slot_i, p] = blk
+                placed.append((r, e, slot_i, new_ids))
+            if placed and self.allocator is not None:
+                all_ids = np.concatenate(
+                    [np.asarray(ids, np.int32)
+                     for _, _, _, ids in placed])
+                updates: Dict[str, Any] = {}
+                for name in self._KV_LEAVES:
+                    tgt = getattr(self._state, name)
+                    if tgt is None:
+                        continue
+                    pgs = np.concatenate(
+                        [e.pages[name] for _, e, _, _ in placed], axis=1)
+                    updates[name] = tgt.at[:, all_ids].set(
+                        jnp.asarray(pgs, tgt.dtype))
+                self._state = self._state._replace(**updates)
+            if placed:
+                slots_arr = np.full((b,), b, np.int32)
+                pos_vals = np.zeros((b,), np.int32)
+                rec_names = [
+                    n for n in ("x_prev", "cm_prev", "wkv", "conv_tail",
+                                "ssm_h", "wkv_scale", "ssm_scale")
+                    if getattr(self._state, n, None) is not None]
+                rec = {n: np.zeros(
+                    (getattr(self._state, n).shape[0], b)
+                    + tuple(getattr(self._state, n).shape[2:]),
+                    getattr(self._state, n).dtype) for n in rec_names}
+                for g, (r, e, slot_i, _) in enumerate(placed):
+                    slots_arr[g] = slot_i
+                    pos_vals[g] = e.pos
+                    for n in rec_names:
+                        rec[n][:, g] = e.leaves[n]
+                self._state = self._slot_restore(self._st(), slots_arr,
+                                                 pos_vals, rec)
+        else:
+            state = self._state
+            max_pos = max(e.pos for _, e in entries)
+            cache_len = (state.cache_k.shape[2]
+                         if state.cache_k is not None else None)
+            bk = self._bucket(max_pos)
+            if cache_len is not None and bk < max_pos:
+                bk = cache_len     # non-pow2 max_seq tail: one-off shape
+            fields: Dict[str, Any] = {}
+            for name in state._fields:
+                leaf = getattr(state, name)
+                if leaf is None:
+                    fields[name] = None
+                elif name == "pos":
+                    fields[name] = np.zeros((b,), np.int32)
+                elif name in self._KV_LEAVES:
+                    fields[name] = np.zeros(
+                        (leaf.shape[0], b, bk) + tuple(leaf.shape[3:]),
+                        leaf.dtype)
+                else:
+                    fields[name] = np.zeros(
+                        (leaf.shape[0], b) + tuple(leaf.shape[2:]),
+                        leaf.dtype)
+            slots_arr = np.full((b,), b, np.int32)
+            for g, (r, e) in enumerate(entries):
+                slots_arr[g] = free[g]
+                fields["pos"][g] = e.pos
+                for name, arr in e.leaves.items():
+                    if name in self._KV_LEAVES:
+                        fields[name][:, g, :e.pos] = arr
+                    else:
+                        fields[name][:, g] = arr
+                placed.append((r, e, free[g], []))
+            sub = type(state)(**fields)
+            self._state = self._insert(self._state, sub, slots_arr)
+
+        now = time.monotonic()
+        step = int(self.metrics["decode_steps"])
+        for r, e, slot_i, _ in placed:
+            r.admitted_at = now
+            self._wait_sum += max(0.0, now - r.submitted_at)
+            self.events.append(("restore", r.rid, slot_i, step))
+            rng = None
+            if e.rng_state is not None:
+                rng = np.random.default_rng()
+                rng.bit_generator.state = e.rng_state
+            slot = _Slot(req=r, next_token=e.next_token,
+                         produced=e.produced, tokens=list(e.tokens),
+                         rng=rng, pos=e.pos)
+            if self.spec_k:
+                slot.session = self.drafter.begin(
+                    [int(t) for t in r.prompt] + slot.tokens[:1])
+                if len(slot.tokens) > 1:
+                    slot.session.extend(slot.tokens[1:])
+            self._slots[slot_i] = slot
+            del self._parked[r.rid]
+        self.metrics["restore_s"] += time.perf_counter() - t_start
+        return leftover
+
+    # -- backpressure / fault injection -------------------------------------
+
+    def _shed(self, r: Request, done: List[Request], status: str) -> None:
+        """Terminal no-service disposition: empty output, counted."""
+        r.status = status
+        r.output = np.zeros((0,), np.int32)
+        r.done_at = time.monotonic()
+        self.metrics["shed_count" if status == "shed"
+                     else "timeout_count"] += 1
+        self.events.append((status, r.rid, -1,
+                            int(self.metrics["decode_steps"])))
+        done.append(r)
+
+    def _enqueue(self, r: Request, done: List[Request]) -> None:
+        """Admit an arrival to the bounded waiting queue, shedding per
+        the configured policy on overflow."""
+        mq = self.config.max_queue
+        w = self._waiting
+        if mq is None or len(w) < mq:
+            w.append(r)
+        else:
+            pol = self.config.admission_policy
+            if pol == "reject-new":
+                self._shed(r, done, "shed")
+            elif pol == "shed-oldest":
+                victim = w.popleft()
+                w.append(r)
+                self._shed(victim, done, "shed")
+            else:                       # shed-lowest-budget
+                lo = min(range(len(w)),
+                         key=lambda i: w[i].max_new_tokens)
+                if w[lo].max_new_tokens < r.max_new_tokens:
+                    victim = w[lo]
+                    del w[lo]
+                    w.append(r)
+                    self._shed(victim, done, "shed")
+                else:                   # ties shed the newcomer
+                    self._shed(r, done, "shed")
+        self.metrics["queue_depth"] = len(w)
+        self.metrics["peak_queue_depth"] = max(
+            self.metrics["peak_queue_depth"], len(w))
+
+    def _sweep_deadlines(self, done: List[Request]) -> None:
+        """Expire deadlined requests: waiting ones shed outright; live
+        ones retire gracefully with their partial output."""
+        now = time.monotonic()
+        w = self._waiting
+        for _ in range(len(w)):         # rotate in place, order kept
+            r = w.popleft()
+            if (r.deadline_s is not None
+                    and now - r.submitted_at >= r.deadline_s):
+                self._shed(r, done, "timeout")
+            else:
+                w.append(r)
+        for i, slot in enumerate(self._slots):
+            if slot is None:
+                continue
+            r = slot.req
+            if (r.deadline_s is not None
+                    and now - r.submitted_at >= r.deadline_s):
+                r.status = "timeout"
+                self.metrics["timeout_count"] += 1
+                self._retire(i, slot, done)
+
+    def _tick(self) -> None:
+        """Per-iteration housekeeping: heartbeat, snapshot cadence, fault
+        injection.  Runs *after* the decode step so snapshots capture a
+        consistent post-step state; the injected kill does NOT snapshot
+        first — hard-kill semantics, forcing restore to replay from the
+        last cadence snapshot (replayed steps are deterministic, so the
+        resumed outputs stay bit-identical)."""
+        if self.heartbeat is not None:
+            self.heartbeat()
+        ds = int(self.metrics["decode_steps"])
+        ev = self.config.snapshot_every
+        if (ev and self.config.snapshot_dir is not None and ds
+                and ds % ev == 0 and ds != self._last_snap_step):
+            self.snapshot()
+            self._last_snap_step = ds
+        if (self.config.kill_at_step is not None and not self._kill_fired
+                and ds >= self.config.kill_at_step):
+            self._kill_fired = True
+            raise WorkerKilled(
+                f"injected fault: worker killed after decode step {ds}")
+
     # -- the loop -----------------------------------------------------------
 
     def serve(self, requests: List[Request]) -> List[Request]:
@@ -866,10 +1410,14 @@ class ServeEngine:
 
         Requests become visible to the scheduler at ``arrival_s`` seconds
         after the call (0 = immediately); every request is served —
-        over-budget requests raise instead of being dropped.
+        over-budget requests raise instead of being dropped — unless a
+        backpressure policy (``max_queue``/``deadline_s``) explicitly
+        sheds it, in which case it returns with a terminal ``status`` and
+        empty/partial output.  Requests whose rid matches a
+        :meth:`restore_snapshot` parked entry resume from their
+        snapshotted state instead of prefilling.
         """
         self._validate(requests)
-        cfg = self.model.cfg
         b = self.max_batch
         if self._state is None:
             self._state = self.ops.init_slot_state(b, self.max_seq)
@@ -883,39 +1431,66 @@ class ServeEngine:
         t0 = time.monotonic()
         for r in requests:
             r.submitted_at = t0 + r.arrival_s
-        queue = collections.deque(
+        # pending = not yet arrived; waiting = arrived, unadmitted (the
+        # bounded admission queue).  Instance attributes so a mid-trace
+        # snapshot persists them alongside the slots.
+        self._pending = collections.deque(
             sorted(requests, key=lambda r: (r.arrival_s, r.rid)))
+        self._waiting = collections.deque()
         done: List[Request] = []
+        self._done_live = done
 
-        while queue or any(s is not None for s in self._slots):
-            # admission: refill free slots with every arrived request
+        while (self._pending or self._waiting
+               or any(s is not None for s in self._slots)):
             now_rel = time.monotonic() - t0
+            while (self._pending
+                   and self._pending[0].arrival_s <= now_rel):
+                self._enqueue(self._pending.popleft(), done)
+            self._sweep_deadlines(done)
+
+            # admission: refill free slots from the waiting queue;
+            # snapshot-restored rids re-enter through their saved state
             free = [i for i, s in enumerate(self._slots) if s is None]
             group: List[Request] = []
-            while (queue and len(group) < len(free)
-                   and queue[0].arrival_s <= now_rel):
-                group.append(queue.popleft())
-            if group and self.paged:
-                # extend-admission; requests the pool cannot hold yet go
-                # back to the queue head (order preserved) and wait for a
-                # retirement to return blocks
-                leftover = self._admit_paged(group, free, done)
-                for r in reversed(leftover):
-                    queue.appendleft(r)
-                if (leftover and len(leftover) == len(group)
-                        and not any(s is not None for s in self._slots)):
-                    raise RuntimeError(
-                        "block pool exhausted: no queued request fits "
-                        "with every slot idle; raise num_blocks")
-            elif group:
-                self._admit(group, free, done)
+            while self._waiting and len(group) < len(free):
+                group.append(self._waiting.popleft())
+            admitted_any = False
+            if group:
+                parked = [r for r in group if r.rid in self._parked]
+                fresh = [r for r in group if r.rid not in self._parked]
+                nfree = free
+                if parked:
+                    leftover = self._admit_restored(parked, nfree, done)
+                    for r in reversed(leftover):
+                        self._waiting.appendleft(r)
+                    n_placed = len(parked) - len(leftover)
+                    admitted_any = n_placed > 0
+                    nfree = nfree[n_placed:]
+                if fresh and self.paged:
+                    # extend-admission; requests the pool cannot hold yet
+                    # go back to the queue head (order preserved) and wait
+                    # for a retirement to return blocks
+                    leftover = self._admit_paged(fresh, nfree, done)
+                    for r in reversed(leftover):
+                        self._waiting.appendleft(r)
+                    admitted_any = (admitted_any
+                                    or len(leftover) < len(fresh))
+                elif fresh:
+                    self._admit(fresh, nfree, done)
+                    admitted_any = True
+            self.metrics["queue_depth"] = len(self._waiting)
 
             active = [i for i, s in enumerate(self._slots) if s is not None]
+            if group and not admitted_any and not active:
+                raise RuntimeError(
+                    "block pool exhausted: no queued request fits "
+                    "with every slot idle; raise num_blocks")
             if not active:
-                if queue:       # idle: wait for the next arrival
+                if self._pending and not self._waiting:
+                    # idle: wait for the next arrival
                     time.sleep(min(
                         0.005,
-                        max(0.0, queue[0].arrival_s
+                        max(0.0, self._pending[0].arrival_s
                             - (time.monotonic() - t0))))
                 continue
 
@@ -926,7 +1501,11 @@ class ServeEngine:
                 self._spec_step(active, done)
             else:
                 self._plain_step(active, done)
+            # heartbeat + snapshot cadence + injected faults (may raise
+            # WorkerKilled out of this call — the supervisor's job)
+            self._tick()
 
+        self.metrics["queue_depth"] = 0
         self.metrics["queue_wait_s"] = self._wait_sum / max(self._n_done, 1)
         self.metrics["slot_occupancy"] = self._occ_num / max(self._occ_den, 1)
         self.metrics["spec_acceptance"] = (

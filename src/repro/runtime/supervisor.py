@@ -1,0 +1,130 @@
+"""Serve-engine supervision: run, detect death, restore, re-admit.
+
+The serving analogue of :class:`repro.parallel.fault_tolerance.TrainSupervisor`:
+a :class:`ServeSupervisor` owns an engine *factory* rather than an engine —
+on a worker death (a :class:`~repro.parallel.fault_tolerance.WorkerKilled`
+escaping ``serve()``, whether injected by ``ServeConfig.kill_at_step`` or a
+real preemption signal translated by the host runtime) it abandons the dead
+engine wholesale, builds a fresh one, restores the latest slot snapshot
+from ``ServeConfig.snapshot_dir``, and re-admits the survivors.
+
+Recovery is **hard-kill** shaped: nothing is read from the dead engine's
+memory.  Everything the new engine knows comes from the last cadence
+snapshot — in-flight requests resume from their snapshotted state
+bit-identically; requests that finished *after* that snapshot (their
+outputs died with the worker) and requests the snapshot never saw are
+replayed from scratch, which is equally bit-identical because per-request
+decoding is deterministic given (prompt, sampling params, seed).  The
+:class:`~repro.parallel.fault_tolerance.HeartbeatMonitor` records each
+incarnation's liveness (``serve()`` beats it every loop iteration), so an
+external health plane sees the same death/respawn sequence the supervisor
+acts on.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+from repro.parallel.fault_tolerance import HeartbeatMonitor, WorkerKilled
+from repro.runtime.serve_loop import Request, ServeEngine
+
+
+def _clone(r: Request) -> Request:
+    """A fresh, unserved copy of a request (replay-from-scratch path).
+
+    The original object may have been mutated by the dead engine
+    (``submitted_at``, partial bookkeeping); replays must start clean, and
+    arrive immediately — their original arrival offset already elapsed in
+    the first incarnation's lifetime.
+    """
+    return Request(rid=r.rid, prompt=r.prompt,
+                   max_new_tokens=r.max_new_tokens, arrival_s=0.0,
+                   temperature=r.temperature, top_k=r.top_k, seed=r.seed,
+                   deadline_s=r.deadline_s)
+
+
+@dataclasses.dataclass
+class RestartRecord:
+    """One recovery cycle, for telemetry/assertions."""
+    restart: int
+    restored_step: Optional[int]        # None = no snapshot had landed
+    resumed_rids: List[int]             # restored mid-flight from the snapshot
+    replayed_rids: List[int]            # re-run from scratch
+    recovered_rids: List[int]           # finished outputs carried over
+
+
+class ServeSupervisor:
+    """Run a serve trace to completion across worker deaths.
+
+    ``engine_factory(incarnation) -> ServeEngine`` builds each worker;
+    incarnation 0 is the initial engine, 1.. are post-crash respawns (the
+    factory decides whether respawns keep injecting faults, get a smaller
+    pool, a different ``max_batch``, ...).  Every engine's config must
+    point at the same ``snapshot_dir``.
+    """
+
+    def __init__(self, engine_factory: Callable[[int], ServeEngine],
+                 max_restarts: int = 5,
+                 monitor: Optional[HeartbeatMonitor] = None,
+                 worker_name: str = "serve"):
+        self.engine_factory = engine_factory
+        self.max_restarts = max_restarts
+        self.monitor = monitor or HeartbeatMonitor([], timeout_s=60.0)
+        self.worker_name = worker_name
+        self.history: List[RestartRecord] = []
+        self.engine: Optional[ServeEngine] = None   # current incarnation
+
+    def _spawn(self, incarnation: int) -> ServeEngine:
+        name = (self.worker_name if incarnation == 0
+                else f"{self.worker_name}-r{incarnation}")
+        engine = self.engine_factory(incarnation)
+        self.monitor.add_worker(name)
+        engine.heartbeat = lambda: self.monitor.beat(name)
+        self.engine = engine
+        self._name = name
+        return engine
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        """Serve ``requests`` to completion; returns them rid-ordered.
+
+        Every submitted rid appears exactly once in the result with a
+        terminal status — completed, shed, or timed out — no matter how
+        many times the worker died along the way.
+        """
+        engine = self._spawn(0)
+        outstanding: List[Request] = list(requests)
+        results: Dict[int, Request] = {}
+        restarts = 0
+        while True:
+            try:
+                for r in engine.serve(outstanding):
+                    results.setdefault(r.rid, r)
+                break
+            except WorkerKilled:
+                self.monitor.mark_dead(self._name)
+                restarts += 1
+                if restarts > self.max_restarts:
+                    raise RuntimeError(
+                        f"restart budget exhausted after {restarts - 1} "
+                        f"recoveries")
+                engine = self._spawn(restarts)
+                try:
+                    survivors, completed = engine.restore_snapshot()
+                    step = engine._ckpt.latest_step()
+                except FileNotFoundError:
+                    survivors, completed, step = [], [], None
+                for r in completed:
+                    results.setdefault(r.rid, r)
+                known = ({r.rid for r in survivors}
+                         | {r.rid for r in completed} | set(results))
+                replay = [_clone(r) for r in requests
+                          if r.rid not in known]
+                outstanding = survivors + replay
+                self.history.append(RestartRecord(
+                    restart=restarts, restored_step=step,
+                    resumed_rids=[r.rid for r in survivors],
+                    replayed_rids=[r.rid for r in replay],
+                    recovered_rids=[r.rid for r in completed]))
+                if not outstanding:
+                    break
+        return [results[rid] for rid in sorted(results)]

@@ -7,7 +7,7 @@ import pytest
 
 from repro.parallel.fault_tolerance import (HeartbeatMonitor,
                                             StragglerDetector,
-                                            TrainSupervisor,
+                                            TrainSupervisor, WorkerKilled,
                                             plan_elastic_remesh)
 
 
@@ -29,6 +29,36 @@ class TestHeartbeat:
         assert mon.dead_workers() == ["w0"]
         mon.beat("w0")
         assert mon.dead_workers() == []
+
+    def test_add_worker_registers_fresh_beat(self):
+        """A respawned worker is not born dead from its predecessor's
+        silence: its first beat is its registration time."""
+        t = [0.0]
+        mon = HeartbeatMonitor(["w0"], timeout_s=10, clock=lambda: t[0])
+        t[0] = 100.0
+        mon.add_worker("w0-r1")
+        assert mon.dead_workers() == ["w0"]
+        assert "w0-r1" not in mon.dead_workers()
+        t[0] = 105.0
+        assert mon.workers["w0-r1"].alive
+        assert mon.alive_count == 1
+
+    def test_mark_dead_is_immediate(self):
+        """An externally-confirmed death (a caught WorkerKilled) takes
+        effect without waiting out the heartbeat timeout."""
+        t = [0.0]
+        mon = HeartbeatMonitor(["w0"], timeout_s=1000, clock=lambda: t[0])
+        mon.mark_dead("w0")
+        assert not mon.workers["w0"].alive
+        assert mon.alive_count == 0
+        assert mon.dead_workers() == ["w0"]   # -inf beat trips the sweep
+        mon.beat("w0")                        # explicit revival
+        assert mon.workers["w0"].alive
+        mon.mark_dead("ghost")                # unknown worker is a no-op
+
+    def test_worker_killed_is_runtime_error(self):
+        with pytest.raises(RuntimeError):
+            raise WorkerKilled("injected")
 
 
 class TestStraggler:
@@ -52,6 +82,33 @@ class TestStraggler:
         assert det.mitigation("severe") == "evict"
         assert det.mitigation("a") == "none"
 
+    def test_ewma_update_rule(self):
+        """ewma' = (1-alpha)*ewma + alpha*x, seeded at the first sample."""
+        det = StragglerDetector(alpha=0.2)
+        det.record("w", 1.0)
+        assert det.ewma["w"] == pytest.approx(1.0)
+        det.record("w", 2.0)
+        assert det.ewma["w"] == pytest.approx(0.8 * 1.0 + 0.2 * 2.0)
+        det.record("w", 2.0)
+        assert det.ewma["w"] == pytest.approx(0.8 * 1.2 + 0.2 * 2.0)
+
+    def test_ewma_converges_and_forgets_transient(self):
+        """A single spike decays geometrically: ~(1-alpha)^n of the spike
+        remains after n clean steps, so a one-off hiccup never flags."""
+        det = StragglerDetector(factor=1.5, alpha=0.2)
+        for w in ("a", "b", "c", "d"):
+            det.record(w, 1.0)
+        det.record("a", 10.0)                 # transient spike
+        assert [w for w, _ in det.stragglers()] == ["a"]
+        for _ in range(20):
+            for w in ("a", "b", "c", "d"):
+                det.record(w, 1.0)
+        assert det.stragglers() == []
+        assert det.ewma["a"] == pytest.approx(1.0, abs=0.05)
+
+    def test_empty_detector_no_stragglers(self):
+        assert StragglerDetector().stragglers() == []
+
 
 class TestElasticRemesh:
     def test_preserves_tp(self):
@@ -67,6 +124,19 @@ class TestElasticRemesh:
     def test_too_few_chips_raises(self):
         with pytest.raises(RuntimeError):
             plan_elastic_remesh(8, model_parallel=16)
+
+    def test_exact_fit_and_remainder(self):
+        """The data axis is the floor multiple: leftover chips idle rather
+        than change the TP degree (weight shards are pinned to it)."""
+        assert plan_elastic_remesh(256, model_parallel=16) == (16, 16)
+        assert plan_elastic_remesh(255, model_parallel=16) == (15, 16)
+        assert plan_elastic_remesh(17, model_parallel=16) == (1, 16)
+
+    def test_pod_rounding_keeps_at_least_one_data_shard(self):
+        # fewer survivors than a pod: fall back to the un-rounded plan
+        data, model = plan_elastic_remesh(32, model_parallel=16,
+                                          pod_size=256)
+        assert (data, model) == (2, 16)
 
 
 class TestSupervisor:
@@ -146,3 +216,29 @@ class TestEndToEndCrashRestore:
             got = mgr.restore(state, shardings={"w": sh})
             np.testing.assert_array_equal(np.asarray(got["w"]),
                                           np.asarray(state["w"]))
+
+    def test_load_arrays_roundtrip_and_resave(self):
+        """The templateless loader (serve snapshots have no pytree to
+        mirror) returns raw arrays + metadata, preserves exotic dtypes and
+        dotted keys, and a re-save at the same step atomically replaces
+        the previous snapshot."""
+        from repro.checkpoint.manager import CheckpointManager
+
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, async_save=False)
+            arrays = {"slot0.tokens": np.arange(5, dtype=np.int32),
+                      "slot0.cache_k": np.ones((2, 3), np.int8)}
+            mgr.save(3, arrays, metadata={"snapshot_version": 1})
+            got, meta = mgr.load_arrays()
+            assert meta["snapshot_version"] == 1
+            assert got["slot0.cache_k"].dtype == np.int8
+            np.testing.assert_array_equal(got["slot0.tokens"],
+                                          arrays["slot0.tokens"])
+            # overwrite-in-place: same step, new contents
+            mgr.save(3, {"slot0.tokens": np.zeros(2, np.int32)},
+                     metadata={"snapshot_version": 1})
+            got2, _ = mgr.load_arrays(3)
+            assert list(got2) == ["slot0.tokens"]
+            assert got2["slot0.tokens"].tolist() == [0, 0]
+            with pytest.raises(FileNotFoundError):
+                CheckpointManager(d + "/nope").load_arrays()
