@@ -35,6 +35,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
                   death mid-trace, supervisor restores the last slot
                   snapshot; writes ``BENCH_chaos.json`` and fails if the
                   recovered outputs diverge from the undisturbed run.
+  * mesh_*      - sharded serving over fake devices (smoke): slot state
+                  on a 1/2/4/8-way mesh data axis + prefill/decode
+                  split; writes ``BENCH_mesh.json`` and fails if sharded
+                  outputs diverge from the single-device engine.  Full
+                  replay: ``python -m benchmarks.serve_bench --mesh``.
 """
 from __future__ import annotations
 
@@ -44,7 +49,7 @@ import traceback
 
 
 SUITE_NAMES = ("pareto", "mac", "caesar", "accuracy", "roofline", "tune",
-               "grads", "serve", "spec", "quant", "paged", "chaos")
+               "grads", "serve", "spec", "quant", "paged", "chaos", "mesh")
 
 
 def main(argv=None):
@@ -53,6 +58,12 @@ def main(argv=None):
                     help="run a single suite (same choices as --only)")
     ap.add_argument("--only", default=None, choices=SUITE_NAMES)
     args = ap.parse_args(argv)
+
+    if (args.only or args.suite) == "mesh":
+        # must land before jax initializes its backend (first bench import)
+        import os
+        os.environ.setdefault(
+            "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
     from benchmarks import (accuracy_bench, caesar_bench, grad_bench,
                             mac_bench, pareto_bench, quant_bench,
@@ -70,6 +81,7 @@ def main(argv=None):
         "quant": quant_bench.run,
         "paged": serve_bench.run_paged,
         "chaos": serve_bench.run_chaos,
+        "mesh": serve_bench.run_mesh,
     }
     only = args.only or args.suite
     if only:

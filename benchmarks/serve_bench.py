@@ -50,6 +50,7 @@ Also registered as the ``serve``, ``spec`` and ``paged`` suites of
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 from typing import Any, Dict, List, Optional
@@ -424,6 +425,134 @@ def sweep_chaos(smoke: bool = False, out_path: Optional[str] = None,
     return report
 
 
+def _stall_p99_ms(engine) -> float:
+    """p99 gap between consecutive decode steps of the last serve()."""
+    walls = getattr(engine, "step_walls", [])
+    if len(walls) < 2:
+        return 0.0
+    gaps = sorted(1e3 * (b - a) for a, b in zip(walls, walls[1:]))
+    return round(gaps[min(len(gaps) - 1, int(0.99 * len(gaps)))], 2)
+
+
+def sweep_mesh(smoke: bool = False, out_path: Optional[str] = None,
+               arch: str = "glm4-9b", n_requests: Optional[int] = None,
+               max_batch: int = 8, max_seq: int = 128, seed: int = 0
+               ) -> Dict[str, Any]:
+    """Sharded-serving scaling sweep on fake devices (the ``mesh`` suite).
+
+    Replays one mixed-length trace — prompts spanning every shape bucket,
+    decode-heavy outputs — through the single-device ``ServeEngine`` and
+    through ``MeshServeEngine`` at every available power-of-two shard
+    count (8 fake devices in CI:
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).  Asserts the
+    sharded outputs are **bit-identical** to the single-device engine at
+    every width, and measures the thing the prefill/decode split is for:
+    the p99 *decode stall* (gap between consecutive decode steps — an
+    inline prefill of a long prompt shows up as one huge gap) with
+    prefill workers on vs off at the widest mesh.  Every engine is warmed
+    over all prompt buckets first so the stall distribution reads
+    steady-state admission traffic, not compile time.
+
+    Writes ``BENCH_mesh.json``; the CI ``mesh-smoke`` lane gates on the
+    committed ``benchmarks/mesh_baseline.json`` floors: ``bit_identical``
+    must hold, every width must keep one decode trace, the split run must
+    show ``overlap_steps`` (decode steps executed while a prefill was in
+    flight — structurally 0 without the split) and the widest mesh must
+    keep ``tok_s_frac_of_single`` above the overhead floor.  The stall
+    p99s are reported for the record: on a single *physical* CPU core the
+    prefill compute steals the core from decode whether it runs inline or
+    on a worker, so the stall win needs real parallel hardware — the
+    correctness + overlap story does not.
+    """
+    from repro.runtime.mesh_serve import MeshServeEngine
+
+    cfg = get_arch(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    n = n_requests if n_requests is not None else (24 if smoke else 48)
+    # long-prompt-heavy mix: prefill stalls are what the split removes
+    mk = lambda s=seed: make_trace(cfg, n, seed=s, rate_hz=200.0,
+                                   len_range=(8, 97),
+                                   max_new_choices=(8, 16, 24))
+    # one warmup request per prompt bucket (16/32/64/128): compiles every
+    # prefill trace + decode/insert before anything is measured
+    warm = [Request(10_000 + i, np.full(ln, 3, np.int32), max_new_tokens=2)
+            for i, ln in enumerate((8, 20, 40, 80))]
+
+    def replay(eng):
+        eng.serve([dataclasses.replace(r) for r in warm])
+        for key in ("prefill_tokens", "decode_tokens", "decode_steps",
+                    "overlap_steps"):
+            eng.metrics[key] = 0
+        stats = _replay(eng, mk())
+        stats["stall_p99_ms"] = _stall_p99_ms(eng)
+        stats["overlap_steps"] = int(eng.metrics["overlap_steps"])
+        return stats, {r.rid: list(map(int, r.output))
+                       for r in eng._done_live}
+
+    single = ServeEngine(model, params,
+                         ServeConfig(max_batch=max_batch, max_seq=max_seq))
+    single_stats, ref = replay(single)
+
+    devices = jax.devices()
+    devcounts = [c for c in (1, 2, 4, 8) if c <= len(devices)]
+    widest = devcounts[-1]
+    scaling: Dict[str, Any] = {}
+    all_identical = True
+    split_stats = None
+    for c in devcounts:
+        eng = MeshServeEngine(model, params, ServeConfig(
+            max_batch=max_batch, max_seq=max_seq, num_shards=c,
+            prefill_workers=2))
+        stats, got = replay(eng)
+        stats["bit_identical"] = got == ref
+        all_identical = all_identical and stats["bit_identical"]
+        stats["decode_traces"] = int(eng.trace_counts["decode"])
+        scaling[str(c)] = stats
+        if c == widest:
+            split_stats = stats
+
+    nosplit = MeshServeEngine(model, params, ServeConfig(
+        max_batch=max_batch, max_seq=max_seq, num_shards=widest,
+        prefill_workers=0))
+    nosplit_stats, got = replay(nosplit)
+    all_identical = all_identical and got == ref
+
+    report = {
+        "meta": {**tuning.version_stamp(), "smoke": smoke, "arch": arch,
+                 "max_batch": max_batch, "max_seq": max_seq,
+                 "n_requests": n, "seed": seed,
+                 "devices": len(devices), "devcounts": devcounts},
+        "single": single_stats,
+        "scaling": scaling,
+        "nosplit": nosplit_stats,
+        "bit_identical": all_identical,
+        "stall_p99_ms_split": split_stats["stall_p99_ms"],
+        "stall_p99_ms_nosplit": nosplit_stats["stall_p99_ms"],
+        # > 1 means prefill workers shrank the worst decode gaps; on a
+        # single *physical* core the prefill compute steals the core from
+        # decode either way, so this is reported, not CI-gated — the
+        # robust split signal is overlap_steps (decode steps taken while
+        # a prefill was in flight: structurally 0 without the split)
+        "stall_improvement": round(
+            nosplit_stats["stall_p99_ms"]
+            / max(split_stats["stall_p99_ms"], 1e-9), 3),
+        "overlap_steps_split": split_stats["overlap_steps"],
+        "overlap_steps_nosplit": nosplit_stats["overlap_steps"],
+        # sharding-overhead bound: widest mesh vs single device (fake
+        # shards only add partitioning cost on CPU, so a floor on this
+        # ratio catches regressions without needing real accelerators)
+        "tok_s_frac_of_single": round(
+            split_stats["tok_s"] / max(single_stats["tok_s"], 1e-9), 3),
+        "decode_traces_max": max(s["decode_traces"]
+                                 for s in scaling.values()),
+    }
+    if out_path:
+        with open(out_path, "w", encoding="utf-8") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+    return report
+
+
 def run(csv_rows):
     """`benchmarks.run` suite entry: smoke trace, writes BENCH_serving.json."""
     report = sweep(smoke=True, out_path="BENCH_serving.json")
@@ -504,6 +633,30 @@ def run_chaos(csv_rows):
             "chaos-recovered outputs diverged from the undisturbed run")
 
 
+def run_mesh(csv_rows):
+    """`benchmarks.run` mesh suite: sharded-serving scaling smoke, writes
+    BENCH_mesh.json; fails if any sharded output diverges."""
+    report = sweep_mesh(smoke=True, out_path="BENCH_mesh.json")
+    for c, s in report["scaling"].items():
+        us = 1e6 * s["wall_s"] / max(s["delivered_tokens"], 1)
+        csv_rows.append((
+            f"mesh_{c}shard_{report['meta']['arch']}", us,
+            f"tok_s={s['tok_s']};stall_p99_ms={s['stall_p99_ms']};"
+            f"bit_identical={s['bit_identical']};"
+            f"decode_traces={s['decode_traces']}"))
+    csv_rows.append((
+        "mesh_prefill_split", 0.0,
+        f"overlap_steps={report['overlap_steps_split']};"
+        f"stall_improvement={report['stall_improvement']};"
+        f"split_p99_ms={report['stall_p99_ms_split']};"
+        f"nosplit_p99_ms={report['stall_p99_ms_nosplit']};"
+        f"tok_s_frac={report['tok_s_frac_of_single']};"
+        f"bit_identical={report['bit_identical']}"))
+    if not report["bit_identical"]:
+        raise AssertionError(
+            "sharded-mesh outputs diverged from the single-device engine")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="Continuous-batching vs gang-scheduler serving "
@@ -527,18 +680,41 @@ def main(argv=None) -> int:
                          "trace (writes BENCH_paged.json)")
     ap.add_argument("--page-size", type=int, default=8,
                     help="tokens per cache page (--paged)")
+    ap.add_argument("--mesh", action="store_true",
+                    help="sharded-serving scaling sweep over fake devices "
+                         "(set XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=8; writes BENCH_mesh.json)")
     ap.add_argument("--out", default=None,
                     help="report path ('' to skip); defaults to "
                          "BENCH_serving.json / BENCH_spec.json / "
-                         "BENCH_paged.json")
+                         "BENCH_paged.json / BENCH_mesh.json")
     args = ap.parse_args(argv)
-    if args.spec and args.paged:
-        ap.error("pick one of --spec / --paged")
+    if sum((args.spec, args.paged, args.mesh)) > 1:
+        ap.error("pick one of --spec / --paged / --mesh")
     out = args.out
     if out is None:
         out = ("BENCH_spec.json" if args.spec
                else "BENCH_paged.json" if args.paged
+               else "BENCH_mesh.json" if args.mesh
                else "BENCH_serving.json")
+
+    if args.mesh:
+        report = sweep_mesh(smoke=args.smoke, out_path=out or None,
+                            arch=args.arch, n_requests=args.requests,
+                            max_batch=max(args.max_batch, 8),
+                            max_seq=max(args.max_seq, 128),
+                            seed=args.seed)
+        print("shards,tok_s,stall_p99_ms,bit_identical,dropped")
+        for c, s in report["scaling"].items():
+            print(f"{c},{s['tok_s']},{s['stall_p99_ms']},"
+                  f"{s['bit_identical']},{s['dropped']}")
+        print(f"# prefill split at {report['meta']['devcounts'][-1]} "
+              f"shards: {report['overlap_steps_split']} overlapped "
+              f"decode steps; stall p99 {report['stall_p99_ms_nosplit']}"
+              f"ms inline vs {report['stall_p99_ms_split']}ms async "
+              f"({report['stall_improvement']}x); bit_identical "
+              f"{report['bit_identical']}")
+        return 0 if report["bit_identical"] else 1
 
     if args.paged:
         report = sweep_paged(smoke=args.smoke, out_path=out or None,

@@ -53,6 +53,14 @@ def main():
                     help="chaos demo: kill the worker after decode step N; "
                          "the supervisor restores the last snapshot and "
                          "finishes the trace (needs --snapshot-dir)")
+    ap.add_argument("--mesh-shards", type=int, default=0, metavar="N",
+                    help="shard slot state over an N-way mesh data axis "
+                         "(fake devices on CPU: XLA_FLAGS=--xla_force_"
+                         "host_platform_device_count=N); outputs stay "
+                         "bit-identical to the single-device engine")
+    ap.add_argument("--prefill-workers", type=int, default=0, metavar="N",
+                    help="run dense prefills on N worker threads off the "
+                         "decode critical path (needs --mesh-shards)")
     args = ap.parse_args()
     if args.spec and args.gang:
         ap.error("--spec needs the continuous engine (drop --gang)")
@@ -62,6 +70,10 @@ def main():
         ap.error("--snapshot-dir needs the continuous engine (drop --gang)")
     if args.kill_at_step is not None and not args.snapshot_dir:
         ap.error("--kill-at-step needs --snapshot-dir to recover from")
+    if args.mesh_shards and args.gang:
+        ap.error("--mesh-shards needs the continuous engine (drop --gang)")
+    if args.prefill_workers and not args.mesh_shards:
+        ap.error("--prefill-workers needs --mesh-shards")
 
     cfg = get_arch(args.arch).reduced()
     model = build_model(cfg)
@@ -71,15 +83,21 @@ def main():
     max_seq = max(args.max_seq, 128) if args.spec else args.max_seq
 
     def make_engine(incarnation=0):
-        return ServeEngine(model, params, ServeConfig(
+        config = ServeConfig(
             max_batch=args.max_batch, max_seq=max_seq, spec_k=args.spec,
             cache=CacheSpec(paged=True, page_size=8) if args.paged
             else None,
+            num_shards=args.mesh_shards or None,
+            prefill_workers=args.prefill_workers,
             snapshot_dir=args.snapshot_dir,
             snapshot_every=(args.snapshot_every if args.snapshot_dir
                             else 0),
             kill_at_step=(args.kill_at_step if incarnation == 0
-                          else None)))
+                          else None))
+        if args.mesh_shards:
+            from repro.runtime.mesh_serve import MeshServeEngine
+            return MeshServeEngine(model, params, config)
+        return ServeEngine(model, params, config)
 
     if args.gang:
         engine = GangServeEngine(model, params, max_batch=args.max_batch,
@@ -120,6 +138,11 @@ def main():
               f"slot occupancy {engine.metrics['slot_occupancy']:.0%}, "
               f"{engine.trace_counts['prefill']} prefill trace(s) over "
               f"{engine.metrics['decode_steps']} decode steps")
+    if args.mesh_shards:
+        print(f"  mesh: {engine.n_shards} shards, loads "
+              f"{engine.shard_loads()}, "
+              f"{engine.metrics['async_prefills']:.0f} async prefills, "
+              f"{engine.metrics['overlap_steps']:.0f} overlapped steps")
     if args.spec:
         print(f"  spec: acceptance {engine.metrics['spec_acceptance']:.0%},"
               f" {engine.metrics['tokens_per_step']:.2f} tokens/step")

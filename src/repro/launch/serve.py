@@ -49,6 +49,16 @@ def main(argv=None):
                     help="chaos: kill the worker after decode step N and "
                          "let the supervisor restore + resume (needs "
                          "--snapshot-dir)")
+    ap.add_argument("--mesh-shards", type=int, default=0, metavar="N",
+                    help="shard the slot state over an N-way mesh data "
+                         "axis (MeshServeEngine; outputs stay "
+                         "bit-identical; fake devices on CPU with "
+                         "XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N)")
+    ap.add_argument("--prefill-workers", type=int, default=0, metavar="N",
+                    help="run dense prefills on N worker threads off the "
+                         "decode critical path (needs --mesh-shards; "
+                         "paged admissions stay inline)")
     args = ap.parse_args(argv)
     if args.spec and args.gang:
         ap.error("--spec needs the continuous engine (drop --gang)")
@@ -58,6 +68,10 @@ def main(argv=None):
         ap.error("--snapshot-dir needs the continuous engine (drop --gang)")
     if args.kill_at_step is not None and not args.snapshot_dir:
         ap.error("--kill-at-step needs --snapshot-dir to recover from")
+    if args.mesh_shards and args.gang:
+        ap.error("--mesh-shards needs the continuous engine (drop --gang)")
+    if args.prefill_workers and not args.mesh_shards:
+        ap.error("--prefill-workers needs --mesh-shards")
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -70,14 +84,20 @@ def main(argv=None):
     def make_engine(incarnation=0):
         # only the first incarnation carries the injected fault: the
         # respawn must run the trace to completion
-        return ServeEngine(model, params, ServeConfig(
+        config = ServeConfig(
             max_batch=args.max_batch, max_seq=args.max_seq,
             spec_k=args.spec, cache=cache,
+            num_shards=args.mesh_shards or None,
+            prefill_workers=args.prefill_workers,
             snapshot_dir=args.snapshot_dir,
             snapshot_every=(args.snapshot_every if args.snapshot_dir
                             else 0),
             kill_at_step=(args.kill_at_step if incarnation == 0
-                          else None)))
+                          else None))
+        if args.mesh_shards:
+            from repro.runtime.mesh_serve import MeshServeEngine
+            return MeshServeEngine(model, params, config)
+        return ServeEngine(model, params, config)
 
     if args.gang:
         engine = GangServeEngine(model, params, max_batch=args.max_batch,
@@ -122,6 +142,11 @@ def main(argv=None):
         print(f"# paged: prefix hits "
               f"{engine.metrics['prefix_hit_tokens']:.0f} tok, peak "
               f"blocks {engine.metrics['peak_blocks']:.0f}")
+    if args.mesh_shards:
+        print(f"# mesh: {engine.n_shards} shards, loads "
+              f"{engine.shard_loads()}, "
+              f"{engine.metrics['async_prefills']:.0f} async prefills, "
+              f"{engine.metrics['overlap_steps']:.0f} overlapped steps")
     if args.spec:
         print(f"# spec: acceptance "
               f"{engine.metrics['spec_acceptance']:.0%}, "

@@ -19,6 +19,26 @@ Array = jax.Array
 # CacheOps: the slot-cache backend protocol (dense / paged)
 # ---------------------------------------------------------------------------
 
+def place_slot_state(state, shardings):
+    """Place each populated slot-state leaf with its sharding.
+
+    ``shardings`` is a matching namedtuple of ``Optional[NamedSharding]``
+    (see :func:`repro.parallel.sharding.slot_state_shardings`) or ``None``
+    for default placement.  Leaves whose sharding is ``None`` are left
+    where they are — the serving-mesh constructors hand every populated
+    leaf a sharding, so this is the single-device no-op path.
+    """
+    if shardings is None:
+        return state
+    placed = {}
+    for name in state._fields:
+        leaf = getattr(state, name)
+        sh = getattr(shardings, name)
+        placed[name] = (leaf if leaf is None or sh is None
+                        else jax.device_put(leaf, sh))
+    return type(state)(**placed)
+
+
 class CacheOps(Protocol):
     """The serving engine's slot-cache seam, as an explicit protocol.
 
@@ -28,8 +48,12 @@ class CacheOps(Protocol):
     type they are handed, so swapping backends never touches the engine's
     jitted programs beyond their (cached) input shapes.
 
-    ``init_slot_state(max_batch, max_seq, abstract=False)``
+    ``init_slot_state(max_batch, max_seq, abstract=False, shardings=None)``
         Allocate the persistent slot state (per-slot ``pos`` vector).
+        ``shardings`` (a matching namedtuple of ``NamedSharding``, see
+        :func:`repro.parallel.sharding.slot_state_shardings`) places each
+        leaf on a serving mesh at construction — the mesh engine's
+        sharded allocation path.
 
     ``slot_update(state, sub, slots)``
         Prefill-admission scatter: insert a bucketed group-prefill's
@@ -70,7 +94,7 @@ class CacheOps(Protocol):
     spec: CacheSpec
 
     def init_slot_state(self, max_batch: int, max_seq: int,
-                        abstract: bool = False): ...
+                        abstract: bool = False, shardings=None): ...
 
     def slot_update(self, state, sub, slots): ...
 
@@ -94,8 +118,9 @@ class DenseCacheOps:
         return self.cfg.cache_spec()
 
     def init_slot_state(self, max_batch: int, max_seq: int,
-                        abstract: bool = False):
-        return T.init_slot_state(self.cfg, max_batch, max_seq, abstract)
+                        abstract: bool = False, shardings=None):
+        st = T.init_slot_state(self.cfg, max_batch, max_seq, abstract)
+        return st if abstract else place_slot_state(st, shardings)
 
     def slot_update(self, state, sub, slots):
         return T.slot_update(state, sub, slots)
@@ -131,10 +156,11 @@ class PagedCacheOps:
         return self.cfg.cache_spec()
 
     def init_slot_state(self, max_batch: int, max_seq: int,
-                        abstract: bool = False):
-        return PG.init_paged_slot_state(self.cfg, max_batch, max_seq,
-                                        self.num_blocks, self.page_size,
-                                        abstract)
+                        abstract: bool = False, shardings=None):
+        st = PG.init_paged_slot_state(self.cfg, max_batch, max_seq,
+                                      self.num_blocks, self.page_size,
+                                      abstract)
+        return st if abstract else place_slot_state(st, shardings)
 
     def slot_update(self, state, sub, slots):
         raise NotImplementedError(
@@ -281,9 +307,14 @@ class Model:
 
     # -- serving slots (continuous batching) --------------------------------
     def init_slot_state(self, max_batch: int, max_seq: int,
-                        abstract: bool = False):
-        """Persistent decode-slot state with a per-slot ``pos`` vector."""
-        return T.init_slot_state(self.cfg, max_batch, max_seq, abstract)
+                        abstract: bool = False, shardings=None):
+        """Persistent decode-slot state with a per-slot ``pos`` vector.
+
+        ``shardings`` places each leaf on a serving mesh at construction
+        (see :func:`repro.parallel.sharding.slot_state_shardings`).
+        """
+        st = T.init_slot_state(self.cfg, max_batch, max_seq, abstract)
+        return st if abstract else place_slot_state(st, shardings)
 
     def slot_update(self, state, sub, slots):
         """Insert a prefill's per-request state into decode slots.

@@ -74,14 +74,18 @@ class PagedDecodeState(NamedTuple):
 
 def init_paged_slot_state(cfg: ArchConfig, max_batch: int, max_seq: int,
                           num_blocks: int, page_size: int,
-                          abstract: bool = False) -> PagedDecodeState:
+                          abstract: bool = False,
+                          shardings=None) -> PagedDecodeState:
     """Pool-backed slot state for ``max_batch`` persistent decode slots.
 
     ``num_blocks`` bounds resident cache memory (``num_blocks *
     page_size`` tokens across *all* slots, vs the dense layout's
     ``max_batch * max_seq``); ``max_seq`` remains each slot's logical
     capacity (the block-table width).  All tables start fully
-    unallocated (sentinel ``num_blocks``).
+    unallocated (sentinel ``num_blocks``).  ``shardings`` (a
+    ``PagedDecodeState`` of ``Optional[NamedSharding]``) places each leaf
+    on a serving mesh at construction — the pool leaves shard over the
+    blocks axis, the per-slot leaves over the slot batch.
     """
     from repro.models import transformer as T   # late: avoid import cycle
 
@@ -127,7 +131,11 @@ def init_paged_slot_state(cfg: ArchConfig, max_batch: int, max_seq: int,
     fields["block_tables"] = (
         jax.ShapeDtypeStruct((max_batch, P), jnp.int32) if abstract
         else jnp.full((max_batch, P), num_blocks, jnp.int32))
-    return PagedDecodeState(**fields)
+    st = PagedDecodeState(**fields)
+    if shardings is not None and not abstract:
+        from repro.models.model_zoo import place_slot_state   # late: cycle
+        st = place_slot_state(st, shardings)
+    return st
 
 
 # Recurrent fields an admission scatter may load from a prefix-cache

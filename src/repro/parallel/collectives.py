@@ -112,6 +112,29 @@ def hierarchical_allreduce(x: Array, mesh: Mesh, *, pod_axis: str = "pod",
                      out_specs=PS(pod_axis, data_axis), check_vma=False)(x)
 
 
+def per_shard_sums(x: Array, mesh: Mesh, axis: str = "data",
+                   weights=None) -> Array:
+    """Per-shard sums of a slot-batch leaf, all-gathered everywhere.
+
+    ``x``: ``(B, ...)`` sharded (or shardable) over ``axis``; returns an
+    ``(n_shards,)`` float32 vector where entry *s* is the sum of shard
+    *s*'s rows — the serving mesh's balance telemetry (live tokens per
+    shard) computed with one tiny all-gather instead of pulling the whole
+    leaf to the host.  ``weights`` optionally masks rows first (e.g. a
+    ``(B,)`` live-slot indicator), letting retired slots' stale ``pos``
+    drop out of the sum.
+    """
+    def f(xs, ws):
+        local = jnp.sum(xs.astype(jnp.float32) * ws.astype(jnp.float32))
+        return jax.lax.all_gather(local, axis)
+
+    if weights is None:
+        weights = jnp.ones((x.shape[0],), jnp.float32)
+    flat = x.reshape(x.shape[0], -1).sum(axis=-1)   # (B,) row totals
+    return shard_map(f, mesh=mesh, in_specs=(PS(axis), PS(axis)),
+                     out_specs=PS(), check_vma=False)(flat, weights)
+
+
 def ring_allreduce(x: Array, mesh: Mesh, axis: str = "data") -> Array:
     """x: (n, *leaf) per-device contributions -> (n, *leaf) of global sums.
 

@@ -41,6 +41,13 @@ DEFAULT_RULES: Dict[str, List[MeshAxes]] = {
     "state": [()],
     "layers": [()],
     "codebooks": [()],
+    # serving mesh (runtime/mesh_serve.py): the slot batch axis of the
+    # engine's decode state, and the paged engine's shared block pool.
+    # Both fall back to replicate when the dim doesn't divide the mesh
+    # (e.g. an odd num_blocks pool on 8 shards serves replicated rather
+    # than refusing).
+    "slots": [("data",), ()],
+    "blocks": [("data",), ()],
     None: [()],
 }
 
@@ -175,3 +182,53 @@ def data_sharding(mesh: Mesh, *, batch_axes: MeshAxes = ("pod", "data")
     axes = tuple(a for a in batch_axes if a in mesh.shape)
     return NamedSharding(mesh, PartitionSpec(axes if len(axes) > 1 else
                                              (axes[0] if axes else None)))
+
+
+# -- serving slot state ------------------------------------------------------
+
+# Leaves of DecodeState / PagedDecodeState whose *second* axis is the
+# shared block pool rather than the slot batch (paged mode only — the
+# recurrent leaves stay per-slot even in a paged state).
+_POOL_LEAVES = ("cache_k", "cache_v", "scale_k", "scale_v")
+
+
+def slot_leaf_axes(name: str, ndim: int, pooled: bool
+                   ) -> Tuple[Optional[str], ...]:
+    """Logical axes of one serving slot-state leaf.
+
+    Every dense leaf is ``(L, B, ...)`` — layers leading, slot batch
+    second; ``pos`` is ``(B,)`` and the paged ``block_tables`` are
+    ``(B, P)``.  In a pooled (paged) state the K/V + scale leaves are
+    ``(L, N_blocks, page, ...)`` and shard over the pool axis instead.
+    """
+    if name == "pos":
+        return ("slots",) + (None,) * (ndim - 1)
+    if name == "block_tables":
+        return ("slots",) + (None,) * (ndim - 1)
+    if pooled and name in _POOL_LEAVES:
+        return ("layers", "blocks") + (None,) * (ndim - 2)
+    return ("layers", "slots") + (None,) * (ndim - 2)
+
+
+def slot_state_shardings(state, mesh: Mesh,
+                         rules: Optional[Dict[str, List[MeshAxes]]] = None):
+    """Per-leaf :class:`NamedSharding` for an engine slot state.
+
+    ``state`` is a ``DecodeState`` / ``PagedDecodeState`` (concrete or
+    abstract — only ``.shape``/``.ndim`` are read); returns the same
+    namedtuple type with a sharding per populated leaf and ``None`` where
+    the leaf is ``None``.  Divisibility fallback comes from the rule
+    engine: a leaf whose slot (or pool) dim doesn't divide the mesh's
+    data axis replicates instead of failing.
+    """
+    pooled = getattr(state, "block_tables", None) is not None
+    out = {}
+    for name in state._fields:
+        leaf = getattr(state, name)
+        if leaf is None:
+            out[name] = None
+            continue
+        axes = slot_leaf_axes(name, leaf.ndim, pooled)
+        out[name] = NamedSharding(mesh,
+                                  spec_for(leaf.shape, axes, mesh, rules))
+    return type(state)(**out)

@@ -106,6 +106,16 @@ class ServeConfig:
         :class:`~repro.parallel.fault_tolerance.WorkerKilled` after that
         decode step, abandoning live state exactly like a preempted host
         (the chaos-harness hook; see ``runtime/supervisor.py``).
+
+    Mesh knobs (consumed by
+    :class:`repro.runtime.mesh_serve.MeshServeEngine`; the base engine
+    validates but ignores them):
+
+      * ``num_shards`` shards the slot batch axis over that many devices
+        of the serving mesh (None = every visible device);
+      * ``prefill_workers`` sizes the async prefill thread pool that
+        keeps long prompts off the decode critical path (0 = prefill
+        inline on the scheduler thread, the single-device behaviour).
     """
 
     max_batch: int = 8
@@ -124,6 +134,9 @@ class ServeConfig:
     snapshot_dir: Optional[str] = None
     snapshot_every: int = 0
     kill_at_step: Optional[int] = None
+    # serving mesh (MeshServeEngine)
+    num_shards: Optional[int] = None
+    prefill_workers: int = 0
 
     def __post_init__(self):
         if self.max_batch < 1:
@@ -157,6 +170,18 @@ class ServeConfig:
         if self.kill_at_step is not None and self.kill_at_step < 1:
             raise ValueError(f"kill_at_step must be >= 1, got "
                              f"{self.kill_at_step}")
+        if self.num_shards is not None and self.num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got "
+                             f"{self.num_shards}")
+        if (self.num_shards is not None
+                and self.max_batch % self.num_shards != 0):
+            raise ValueError(
+                f"max_batch {self.max_batch} must divide evenly into "
+                f"num_shards {self.num_shards} (every shard owns "
+                f"max_batch / num_shards slots)")
+        if self.prefill_workers < 0:
+            raise ValueError(f"prefill_workers must be >= 0, got "
+                             f"{self.prefill_workers}")
 
 
 @dataclasses.dataclass
@@ -423,6 +448,7 @@ class ServeEngine:
         # ("admit"|"retire", rid, slot, decode_step); slot -1 marks a
         # request retired straight from prefill (1-token budget)
         self.events: List[tuple] = []
+        self.step_walls: List[float] = []
         self.metrics: Dict[str, float] = {
             "prefill_tokens": 0, "decode_tokens": 0, "decode_steps": 0,
             "queue_wait_s": 0.0, "slot_occupancy": 0.0,
@@ -435,6 +461,9 @@ class ServeEngine:
             # (prefill compute that never ran) and the block pool's
             # high-water mark (resident cache memory in pages)
             "prefix_hit_tokens": 0, "peak_blocks": 0,
+            # mesh mode: decode steps taken while a prefill was in flight
+            # (0 whenever admissions run inline)
+            "overlap_steps": 0,
             # backpressure + fault tolerance: arrived-but-unadmitted queue
             # depth (instantaneous / high-water), shed + deadline-expired
             # request counts, snapshot/restore work
@@ -554,6 +583,33 @@ class ServeEngine:
             if self.paged:
                 self._free_slot_pages(i)
             self._slots[i] = None
+
+    # -- mesh seams ----------------------------------------------------------
+    # Overridden by runtime/mesh_serve.py's MeshServeEngine; the base
+    # implementations are the exact single-device behaviour the loop had
+    # before the seams existed.
+
+    def _init_state(self):
+        """Allocate the slot-batch state (first serve() call).  The mesh
+        engine overrides this to place every leaf with a NamedSharding
+        over the serving mesh's data axis."""
+        return self.ops.init_slot_state(self.max_batch, self.max_seq)
+
+    def _free_slots(self) -> List[int]:
+        """Free slot indices in admission-preference order.  The base
+        engine fills lowest-index first; the mesh engine orders by shard
+        load (least-loaded shard wins) and excludes slots reserved by
+        in-flight async prefills."""
+        return [i for i, s in enumerate(self._slots) if s is None]
+
+    def _poll_admissions(self, done: List[Request]) -> None:
+        """Complete any finished async prefills (mesh engine hook).  The
+        base engine prefills inline, so there is never anything to poll."""
+
+    def _admissions_inflight(self) -> bool:
+        """Whether async prefills are still pending (keeps the serve loop
+        alive while a prefill worker owns the only remaining work)."""
+        return False
 
     # -- paged slot memory ---------------------------------------------------
 
@@ -755,9 +811,14 @@ class ServeEngine:
                 self._slots[slot_i] = slot
         return leftover
 
-    def _admit(self, group: List[Request], free: List[int],
-               done: List[Request]) -> None:
-        """Prefill a bucket-padded admission group into free slots."""
+    def _prefill_args(self, group: List[Request], free: List[int]):
+        """Bucket-pad an admission group into prefill arguments.
+
+        Returns ``(inputs, lengths, slots)`` — pure array construction,
+        shared by the inline admission path and the mesh engine's async
+        prefill workers (the arrays are what a worker thread hands to the
+        jitted prefill; ``slots`` drives the insert scatter afterwards).
+        """
         cfg = self.model.cfg
         b = self.max_batch
         bucket = self._bucket(max(len(r.prompt) for r in group))
@@ -772,7 +833,25 @@ class ServeEngine:
             lengths[j] = len(r.prompt)
             slots[j] = free[j]
         key = "tokens" if cfg.input_kind == "tokens" else "frames"
-        logits, sub = self._prefill(self.params, {key: arr}, lengths)
+        return {key: arr}, lengths, slots
+
+    def _admit(self, group: List[Request], free: List[int],
+               done: List[Request]) -> None:
+        """Prefill a bucket-padded admission group into free slots."""
+        inputs, lengths, slots = self._prefill_args(group, free)
+        logits, sub = self._prefill(self.params, inputs, lengths)
+        self._finish_admit(group, free, logits, sub, slots, done)
+
+    def _finish_admit(self, group: List[Request], free: List[int],
+                      logits, sub, slots: np.ndarray,
+                      done: List[Request]) -> None:
+        """Insert prefilled sub-state into the slot batch + bookkeeping.
+
+        The second half of :meth:`_admit`, split out so the mesh engine's
+        prefill workers can run the prefill off-thread and hand
+        ``(logits, sub)`` back to the scheduler thread, which owns the
+        slot state and performs the insert scatter.
+        """
         self._state = self._insert(self._state, sub, slots)
         ids, rows = self._pull_logits(
             logits, any(r.temperature > 0.0 for r in group))
@@ -1418,13 +1497,16 @@ class ServeEngine:
         snapshotted state instead of prefilling.
         """
         self._validate(requests)
-        b = self.max_batch
         if self._state is None:
-            self._state = self.ops.init_slot_state(b, self.max_seq)
+            self._state = self._init_state()
         # events and the averaged metrics (queue_wait_s, slot_occupancy)
         # describe this call's trace; the token/step counters accumulate
         # over the engine lifetime.
         self.events = []
+        # monotonic timestamp after every decode step (this call only):
+        # consecutive diffs are the decode-stall distribution the mesh
+        # bench reads (a long inline prefill shows up as one huge gap)
+        self.step_walls: List[float] = []
         self._occ_num = self._occ_den = 0
         self._wait_sum = 0.0
         self._n_done = 0
@@ -1440,17 +1522,20 @@ class ServeEngine:
         done: List[Request] = []
         self._done_live = done
 
-        while (self._pending or self._waiting
+        while (self._pending or self._waiting or self._admissions_inflight()
                or any(s is not None for s in self._slots)):
             now_rel = time.monotonic() - t0
             while (self._pending
                    and self._pending[0].arrival_s <= now_rel):
                 self._enqueue(self._pending.popleft(), done)
             self._sweep_deadlines(done)
+            # land any prefills the worker pool finished since last step
+            # (mesh engine; inline engines never have admissions in flight)
+            self._poll_admissions(done)
 
             # admission: refill free slots from the waiting queue;
             # snapshot-restored rids re-enter through their saved state
-            free = [i for i, s in enumerate(self._slots) if s is None]
+            free = self._free_slots()
             group: List[Request] = []
             while self._waiting and len(group) < len(free):
                 group.append(self._waiting.popleft())
@@ -1481,12 +1566,16 @@ class ServeEngine:
             self.metrics["queue_depth"] = len(self._waiting)
 
             active = [i for i, s in enumerate(self._slots) if s is not None]
-            if group and not admitted_any and not active:
+            if (group and not admitted_any and not active
+                    and not self._admissions_inflight()):
                 raise RuntimeError(
                     "block pool exhausted: no queued request fits "
                     "with every slot idle; raise num_blocks")
             if not active:
-                if self._pending and not self._waiting:
+                if self._admissions_inflight():
+                    # nothing to decode until a prefill worker delivers
+                    time.sleep(0.0005)
+                elif self._pending and not self._waiting:
                     # idle: wait for the next arrival
                     time.sleep(min(
                         0.005,
@@ -1501,6 +1590,12 @@ class ServeEngine:
                 self._spec_step(active, done)
             else:
                 self._plain_step(active, done)
+            self.step_walls.append(time.monotonic())
+            if self._admissions_inflight():
+                # a decode step ran while a prefill was still in flight —
+                # the prefill/decode split working as intended (always 0
+                # on the inline admission path)
+                self.metrics["overlap_steps"] += 1
             # heartbeat + snapshot cadence + injected faults (may raise
             # WorkerKilled out of this call — the supervisor's job)
             self._tick()

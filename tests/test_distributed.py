@@ -5,6 +5,7 @@ import json
 import os
 import subprocess
 import sys
+import tempfile
 import textwrap
 
 import numpy as np
@@ -18,6 +19,16 @@ def run_py(code: str, devices: int = 8, timeout: int = 480) -> str:
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
     env["JAX_PLATFORMS"] = "cpu"
+    # Hermeticity: conftest pins REPRO_TUNE_CACHE for *this* process, but
+    # when pytest runs without the fixture env (or a dev shell exports a
+    # real table) the subprocess would inherit — and autotune paths could
+    # write — the user's persistent tuned table.  Pin a fresh absent path
+    # per call, and pin the interpret knob to the parent's resolved value
+    # so subprocess kernels compile the same way the parent's would.
+    env["REPRO_TUNE_CACHE"] = os.path.join(
+        tempfile.mkdtemp(prefix="repro-dist-tuned-"), "absent.json")
+    env["REPRO_KERNEL_INTERPRET"] = os.environ.get(
+        "REPRO_KERNEL_INTERPRET", "1")
     out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
                          capture_output=True, text=True, env=env,
                          timeout=timeout)
