@@ -170,6 +170,11 @@ def _replay(engine, requests: List[Request]) -> Dict[str, Any]:
         stats["spec_acceptance"] = round(m["spec_acceptance"], 3)
         stats["draft_tokens"] = int(m["draft_tokens"])
         stats["draft_accepted"] = int(m["draft_accepted"])
+        stats["model_drafts"] = int(m.get("model_drafts", 0))
+        stats["fallback_drafts"] = int(m.get("fallback_drafts", 0))
+        hist = m.get("spec_k_hist") or {}
+        stats["spec_k_hist"] = {str(k): int(v)
+                                for k, v in sorted(hist.items())}
     return stats
 
 
@@ -220,8 +225,15 @@ def sweep_spec(smoke: bool = False, out_path: Optional[str] = None,
                arch: str = "glm4-9b", spec_k: int = 5,
                n_requests: Optional[int] = None, max_batch: int = 4,
                max_seq: int = 128, seed: int = 0,
-               reps: int = 2) -> Dict[str, Any]:
+               reps: int = 2, drafter: str = "ngram") -> Dict[str, Any]:
     """Spec-vs-plain comparison on the draftable trace (see module doc).
+
+    ``drafter`` picks the speculation tier for the spec engine: ``ngram``
+    (host-side prompt lookup) or ``draft_model`` (the batched tiny-LM
+    drafter with n-gram fallback — the bench's derived draft LM is
+    randomly initialised, so its confidence gate tiers most slot-steps
+    down to the fallback; the number this row measures is the *tiered
+    pipeline's* throughput including the draft-model dispatch overhead).
 
     Each engine replays the measured trace ``reps`` times (interleaved
     plain/spec) and the fastest replay is reported — shared CI runners
@@ -241,11 +253,16 @@ def sweep_spec(smoke: bool = False, out_path: Optional[str] = None,
 
     def build(k):
         eng = ServeEngine(model, params, ServeConfig(
-            max_batch=max_batch, max_seq=max_seq, spec_k=k))
+            max_batch=max_batch, max_seq=max_seq, spec_k=k,
+            drafter=(drafter if k else None)))
         # steady-state comparison: compiles and the tuned-table boot are
         # paid on a small side trace, then the measured trace replays
         # against warm programs (the plain-vs-gang bench measures the
-        # compile story; here the question is decode throughput)
+        # compile story; here the question is decode throughput).  A
+        # draft-model drafter pre-compiles its buckets the same way —
+        # the warm trace's streams are too short to reach them all.
+        if hasattr(eng.drafter, "warm"):
+            eng.drafter.warm()
         eng.serve(make_spec_trace(cfg, 6, seed=seed + 1))
         return eng
 
@@ -254,8 +271,15 @@ def sweep_spec(smoke: bool = False, out_path: Optional[str] = None,
         # lifetime: zero them so the reported (and CI-gated) stats
         # describe the measured trace only, not warmup + measured
         for key in ("prefill_tokens", "decode_tokens", "decode_steps",
-                    "spec_steps", "draft_tokens", "draft_accepted"):
+                    "spec_steps", "draft_tokens", "draft_accepted",
+                    "model_drafts", "fallback_drafts"):
             eng.metrics[key] = 0
+        eng.metrics["spec_k_hist"] = {}
+        # the tier counters are mirrored from the drafter at serve() end;
+        # zero the source so the mirror describes this replay only
+        for attr in ("model_dispatches", "fallback_dispatches"):
+            if hasattr(eng.drafter, attr):
+                setattr(eng.drafter, attr, 0)
         reqs = make_spec_trace(cfg, n, seed=seed)
         return _replay(eng, reqs), reqs
 
@@ -278,7 +302,7 @@ def sweep_spec(smoke: bool = False, out_path: Optional[str] = None,
         "meta": {**tuning.version_stamp(), "smoke": smoke, "arch": arch,
                  "max_batch": max_batch, "max_seq": max_seq,
                  "n_requests": n, "seed": seed, "spec_k": spec_k,
-                 "drafter": "ngram", "trace": "motif-prompt draftable"},
+                 "drafter": drafter, "trace": "motif-prompt draftable"},
         "plain": plain_stats,
         "spec": spec_stats,
         "speedup_tok_s": round(
@@ -570,8 +594,13 @@ def run(csv_rows):
 
 
 def run_spec(csv_rows):
-    """`benchmarks.run` spec suite: smoke trace, writes BENCH_spec.json."""
-    report = sweep_spec(smoke=True, out_path="BENCH_spec.json")
+    """`benchmarks.run` spec suite: smoke trace, writes BENCH_spec.json.
+
+    Runs the full tiered pipeline (draft-model drafter with n-gram
+    fallback) so the gated number covers the drafter the flag ships, not
+    just the cheapest tier."""
+    report = sweep_spec(smoke=True, out_path="BENCH_spec.json",
+                        drafter="draft_model")
     for name in ("plain", "spec"):
         s = report[name]
         us = 1e6 * s["wall_s"] / max(s["delivered_tokens"], 1)
@@ -583,6 +612,7 @@ def run_spec(csv_rows):
         "spec_speedup", 0.0,
         f"spec_over_plain={report['speedup_tok_s']};"
         f"acceptance={report['spec_acceptance']};"
+        f"drafter={report['meta']['drafter']};"
         f"greedy_match={report['greedy_match']}"))
     if not report["greedy_match"]:
         raise AssertionError(
@@ -675,6 +705,11 @@ def main(argv=None) -> int:
                          "draftable trace (writes BENCH_spec.json)")
     ap.add_argument("--spec-k", type=int, default=5,
                     help="drafted tokens per slot per step (--spec)")
+    ap.add_argument("--drafter", choices=("ngram", "draft_model"),
+                    default="ngram",
+                    help="speculation tier for the spec engine (--spec): "
+                         "host-side n-gram lookup or the batched "
+                         "draft-model drafter with n-gram fallback")
     ap.add_argument("--paged", action="store_true",
                     help="paged-vs-dense comparison on the shared-prefix "
                          "trace (writes BENCH_paged.json)")
@@ -742,14 +777,16 @@ def main(argv=None) -> int:
                             n_requests=args.requests,
                             max_batch=args.max_batch,
                             max_seq=max(args.max_seq, 128),
-                            seed=args.seed)
+                            seed=args.seed, drafter=args.drafter)
         print("engine,tok_s,steps,tokens_per_step,dropped")
         for name in ("plain", "spec"):
             s = report[name]
             print(f"{name},{s['tok_s']},{s['decode_steps']},"
                   f"{s.get('tokens_per_step', '')},{s['dropped']}")
-        print(f"# speedup (spec/plain): {report['speedup_tok_s']}x; "
+        print(f"# speedup (spec/plain, {report['meta']['drafter']}): "
+              f"{report['speedup_tok_s']}x; "
               f"acceptance {report['spec_acceptance']}; "
+              f"k hist {report['spec'].get('spec_k_hist', {})}; "
               f"greedy_match {report['greedy_match']}")
         ok = (report["greedy_match"] and report["plain"]["dropped"] == 0
               and report["spec"]["dropped"] == 0)

@@ -34,46 +34,12 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="glm4-9b")
     ap.add_argument("--requests", type=int, default=16)
-    ap.add_argument("--max-batch", type=int, default=4)
-    ap.add_argument("--max-seq", type=int, default=64)
     ap.add_argument("--gang", action="store_true",
                     help="use the old lockstep scheduler instead")
-    ap.add_argument("--spec", type=int, default=0, metavar="K",
-                    help="speculative decoding: draft K tokens per slot "
-                         "per step (n-gram drafter)")
-    ap.add_argument("--paged", action="store_true",
-                    help="paged slot memory + radix prefix cache; replays "
-                         "the shared-prefix trace where prefix reuse pays")
-    ap.add_argument("--snapshot-dir", default=None, metavar="DIR",
-                    help="periodic slot snapshots (and, with "
-                         "--kill-at-step, preempt-and-resume)")
-    ap.add_argument("--snapshot-every", type=int, default=8,
-                    metavar="STEPS")
-    ap.add_argument("--kill-at-step", type=int, default=None, metavar="N",
-                    help="chaos demo: kill the worker after decode step N; "
-                         "the supervisor restores the last snapshot and "
-                         "finishes the trace (needs --snapshot-dir)")
-    ap.add_argument("--mesh-shards", type=int, default=0, metavar="N",
-                    help="shard slot state over an N-way mesh data axis "
-                         "(fake devices on CPU: XLA_FLAGS=--xla_force_"
-                         "host_platform_device_count=N); outputs stay "
-                         "bit-identical to the single-device engine")
-    ap.add_argument("--prefill-workers", type=int, default=0, metavar="N",
-                    help="run dense prefills on N worker threads off the "
-                         "decode critical path (needs --mesh-shards)")
+    ServeConfig.add_args(ap)           # the shared engine flag set
+    ap.set_defaults(max_seq=64)        # demo-sized sequences
     args = ap.parse_args()
-    if args.spec and args.gang:
-        ap.error("--spec needs the continuous engine (drop --gang)")
-    if args.paged and args.gang:
-        ap.error("--paged needs the continuous engine (drop --gang)")
-    if args.gang and args.snapshot_dir:
-        ap.error("--snapshot-dir needs the continuous engine (drop --gang)")
-    if args.kill_at_step is not None and not args.snapshot_dir:
-        ap.error("--kill-at-step needs --snapshot-dir to recover from")
-    if args.mesh_shards and args.gang:
-        ap.error("--mesh-shards needs the continuous engine (drop --gang)")
-    if args.prefill_workers and not args.mesh_shards:
-        ap.error("--prefill-workers needs --mesh-shards")
+    ServeConfig.check_args(ap, args, gang=args.gang)
 
     cfg = get_arch(args.arch).reduced()
     model = build_model(cfg)
@@ -83,17 +49,10 @@ def main():
     max_seq = max(args.max_seq, 128) if args.spec else args.max_seq
 
     def make_engine(incarnation=0):
-        config = ServeConfig(
-            max_batch=args.max_batch, max_seq=max_seq, spec_k=args.spec,
-            cache=CacheSpec(paged=True, page_size=8) if args.paged
-            else None,
-            num_shards=args.mesh_shards or None,
-            prefill_workers=args.prefill_workers,
-            snapshot_dir=args.snapshot_dir,
-            snapshot_every=(args.snapshot_every if args.snapshot_dir
-                            else 0),
-            kill_at_step=(args.kill_at_step if incarnation == 0
-                          else None))
+        config = ServeConfig.from_args(
+            args, incarnation=incarnation, max_seq=max_seq,
+            cache=(CacheSpec(paged=True, page_size=8) if args.paged
+                   else None))
         if args.mesh_shards:
             from repro.runtime.mesh_serve import MeshServeEngine
             return MeshServeEngine(model, params, config)
@@ -144,8 +103,10 @@ def main():
               f"{engine.metrics['async_prefills']:.0f} async prefills, "
               f"{engine.metrics['overlap_steps']:.0f} overlapped steps")
     if args.spec:
-        print(f"  spec: acceptance {engine.metrics['spec_acceptance']:.0%},"
-              f" {engine.metrics['tokens_per_step']:.2f} tokens/step")
+        print(f"  spec ({args.drafter or 'ngram'}): acceptance "
+              f"{engine.metrics['spec_acceptance']:.0%}, "
+              f"{engine.metrics['tokens_per_step']:.2f} tokens/step, "
+              f"k hist {dict(sorted(engine.metrics.spec_k_hist.items()))}")
     if args.paged:
         print(f"  paged: prefix hits "
               f"{engine.metrics['prefix_hit_tokens']:.0f} tok "

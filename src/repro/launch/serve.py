@@ -11,7 +11,7 @@ import time
 import jax
 import numpy as np
 
-from repro.configs import CORDIC_EXEC, CacheSpec, get_arch
+from repro.configs import get_arch
 from repro.models.model_zoo import build_model
 from repro.runtime.serve_loop import (GangServeEngine, Request, ServeConfig,
                                       ServeEngine)
@@ -23,77 +23,23 @@ def main(argv=None):
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--max-batch", type=int, default=4)
-    ap.add_argument("--max-seq", type=int, default=256)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--gang", action="store_true",
                     help="use the old lockstep scheduler")
-    ap.add_argument("--spec", type=int, default=0, metavar="K",
-                    help="speculative decoding: draft K tokens per slot "
-                         "per step (n-gram drafter; greedy outputs stay "
-                         "bit-identical to plain decode)")
-    ap.add_argument("--paged", action="store_true",
-                    help="paged slot memory + radix prefix cache: K/V "
-                         "lives in a shared block pool, shared-prefix "
-                         "admissions reuse already-prefilled pages")
-    ap.add_argument("--page-size", type=int, default=16,
-                    help="tokens per cache page (--paged)")
-    ap.add_argument("--snapshot-dir", default=None, metavar="DIR",
-                    help="slot snapshot directory: enables periodic "
-                         "snapshots and (with --kill-at-step) "
-                         "preempt-and-resume")
-    ap.add_argument("--snapshot-every", type=int, default=8,
-                    metavar="STEPS",
-                    help="snapshot cadence in decode steps (--snapshot-dir)")
-    ap.add_argument("--kill-at-step", type=int, default=None, metavar="N",
-                    help="chaos: kill the worker after decode step N and "
-                         "let the supervisor restore + resume (needs "
-                         "--snapshot-dir)")
-    ap.add_argument("--mesh-shards", type=int, default=0, metavar="N",
-                    help="shard the slot state over an N-way mesh data "
-                         "axis (MeshServeEngine; outputs stay "
-                         "bit-identical; fake devices on CPU with "
-                         "XLA_FLAGS=--xla_force_host_platform_"
-                         "device_count=N)")
-    ap.add_argument("--prefill-workers", type=int, default=0, metavar="N",
-                    help="run dense prefills on N worker threads off the "
-                         "decode critical path (needs --mesh-shards; "
-                         "paged admissions stay inline)")
+    ServeConfig.add_args(ap)           # the shared engine flag set
     args = ap.parse_args(argv)
-    if args.spec and args.gang:
-        ap.error("--spec needs the continuous engine (drop --gang)")
-    if args.paged and args.gang:
-        ap.error("--paged needs the continuous engine (drop --gang)")
-    if args.gang and args.snapshot_dir:
-        ap.error("--snapshot-dir needs the continuous engine (drop --gang)")
-    if args.kill_at_step is not None and not args.snapshot_dir:
-        ap.error("--kill-at-step needs --snapshot-dir to recover from")
-    if args.mesh_shards and args.gang:
-        ap.error("--mesh-shards needs the continuous engine (drop --gang)")
-    if args.prefill_workers and not args.mesh_shards:
-        ap.error("--prefill-workers needs --mesh-shards")
+    ServeConfig.check_args(ap, args, gang=args.gang)
 
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
-    cache = (CacheSpec(paged=True, page_size=args.page_size)
-             if args.paged else None)
 
     def make_engine(incarnation=0):
         # only the first incarnation carries the injected fault: the
         # respawn must run the trace to completion
-        config = ServeConfig(
-            max_batch=args.max_batch, max_seq=args.max_seq,
-            spec_k=args.spec, cache=cache,
-            num_shards=args.mesh_shards or None,
-            prefill_workers=args.prefill_workers,
-            snapshot_dir=args.snapshot_dir,
-            snapshot_every=(args.snapshot_every if args.snapshot_dir
-                            else 0),
-            kill_at_step=(args.kill_at_step if incarnation == 0
-                          else None))
+        config = ServeConfig.from_args(args, incarnation=incarnation)
         if args.mesh_shards:
             from repro.runtime.mesh_serve import MeshServeEngine
             return MeshServeEngine(model, params, config)
@@ -148,10 +94,15 @@ def main(argv=None):
               f"{engine.metrics['async_prefills']:.0f} async prefills, "
               f"{engine.metrics['overlap_steps']:.0f} overlapped steps")
     if args.spec:
-        print(f"# spec: acceptance "
+        print(f"# spec ({args.drafter or 'ngram'}): acceptance "
               f"{engine.metrics['spec_acceptance']:.0%}, "
               f"{engine.metrics['tokens_per_step']:.2f} tokens/step over "
-              f"{engine.metrics['decode_steps']:.0f} steps")
+              f"{engine.metrics['decode_steps']:.0f} steps, "
+              f"k hist {dict(sorted(engine.metrics.spec_k_hist.items()))}")
+        if args.drafter == "draft_model":
+            print(f"# drafter tiers: {engine.metrics['model_drafts']:.0f} "
+                  f"model, {engine.metrics['fallback_drafts']:.0f} "
+                  f"fallback dispatches")
     if args.snapshot_dir:
         print(f"# snapshots: {engine.metrics['snapshots']:.0f} taken "
               f"({engine.metrics['snapshot_s'] * 1e3:.0f} ms total), "

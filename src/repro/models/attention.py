@@ -201,12 +201,26 @@ def _attend_decode(q: Array, keys: Array, vals: Array, pos: Array,
 
 
 def _attend_verify(q: Array, keys: Array, vals: Array, posv: Array,
-                   pol: ExecutionPolicy, window) -> Array:
+                   pol: ExecutionPolicy, window,
+                   old_keys: Optional[Array] = None,
+                   old_vals: Optional[Array] = None) -> Array:
     """K-candidate attend over a (B,S,Hkv,dh) view (see verify_attention).
 
     Shared mask/softmax/einsum half of the verify pass; per-query
     numerics are exactly :func:`_attend_decode` at that position, for
     both the dense and paged layouts.
+
+    With ``old_keys``/``old_vals`` (the pre-write cache view) the cache
+    is a **ring**: every candidate write landed at its wrapped slot, so
+    a later candidate ``j`` has evicted absolute position
+    ``pos + j - s_max`` — an entry that is still inside query ``i``'s
+    window for ``j > i``.  Instead of masking those columns out, each
+    query selects per-column between the old and new view (old where the
+    column holds a strictly-later candidate's write), which restores
+    exactly what plain decode attended to at that position.  The select
+    happens on the gathered K/V (one fused einsum per call), so the FP
+    contraction order over columns — and with it bit-exactness vs plain
+    ring decode — is unchanged.
     """
     b, kq, hq, dh = q.shape
     s_max = keys.shape[1]
@@ -215,22 +229,39 @@ def _attend_verify(q: Array, keys: Array, vals: Array, posv: Array,
     offs = jnp.arange(kq, dtype=posv.dtype)
     wpos = posv[:, None] + offs[None, :]                  # (B,K) absolute
     qg = q.reshape(b, kq, hkv, g, dh)
-    scores = jnp.einsum("bskgd,btkd->bkgst", qg, keys) / jnp.sqrt(float(dh))
     t = jnp.arange(s_max)
     age = jnp.mod(wpos[..., None] - t, s_max)             # (B,K,S); 0=self
     valid = age < jnp.minimum(wpos[..., None] + 1, s_max)
     in_window = age < window
     # this call's candidate columns: slot t holds candidate j = d when
-    # d < K *and* that write landed (pos + d < s_max); query i must not
-    # see j > i
+    # d < K; query i must not see the *new* value of j > i
     d = jnp.mod(t[None, None, :] - posv[:, None, None], s_max)
-    future = ((d > offs[None, :, None]) & (d < kq)
-              & (posv[:, None, None] + d < s_max))
-    mask = valid & in_window & ~future
+    later = (d > offs[None, :, None]) & (d < kq)          # (B,K,S)
+    if old_keys is not None:
+        # ring mode: query i sees the pre-write (evicted) entry at a
+        # later candidate's slot; the age mask decides whether that old
+        # position was ever written at all
+        sel = later[..., None, None]                      # (B,K,S,1,1)
+        keys_q = jnp.where(sel, old_keys[:, None], keys[:, None])
+        vals_q = jnp.where(sel, old_vals[:, None], vals[:, None])
+        scores = jnp.einsum("bskgd,bstkd->bkgst", qg,
+                            keys_q) / jnp.sqrt(float(dh))
+        mask = valid & in_window
+    else:
+        # linear mode: a write landed only when pos + d < s_max (OOB
+        # writes drop) — a dropped overflow write never shadows the old
+        # entry that still lives at its wrapped index
+        future = later & (posv[:, None, None] + d < s_max)
+        scores = jnp.einsum("bskgd,btkd->bkgst", qg,
+                            keys) / jnp.sqrt(float(dh))
+        mask = valid & in_window & ~future
     mask = mask[:, None, None]                            # (B,1,1,K,S)
     scores = jnp.where(mask, scores.astype(jnp.float32), NEG_INF)
     probs = L.softmax(scores, pol).astype(q.dtype)
-    ctx = jnp.einsum("bkgst,btkd->bskgd", probs, vals)
+    if old_keys is not None:
+        ctx = jnp.einsum("bkgst,bstkd->bskgd", probs, vals_q)
+    else:
+        ctx = jnp.einsum("bkgst,btkd->bskgd", probs, vals)
     return ctx.reshape(b, kq, hq, dh)
 
 
@@ -300,33 +331,44 @@ def verify_attention(q: Array, k_new: Array, v_new: Array, cache_k: Array,
                      cache_v: Array, pos: Array, cfg: ArchConfig,
                      pol: ExecutionPolicy, window,
                      scale_k: Optional[Array] = None,
-                     scale_v: Optional[Array] = None):
+                     scale_v: Optional[Array] = None,
+                     ring: bool = False):
     """Speculative verify: K candidate positions scored in one pass.
 
     q/k_new/v_new: (B,K,H*,dh) — row b's candidates sit at absolute
     positions ``pos[b] .. pos[b]+K-1``.  All K K/V columns are written
-    first (the cache is treated as **linear**: writes past the cache end
-    are dropped, never ring-wrapped — a wrapped draft write would clobber
-    still-valid history with a token the host may reject), then every
-    query is masked to its own committed history plus the *earlier*
-    candidates of this call:
+    first, then every query is masked to its own committed history plus
+    the *earlier* candidates of this call:
 
       * the age mask is the decode mask per candidate position,
-      * candidate columns ``j > i`` (this call's future writes) are
+      * ``ring=False`` (a cache at least ``max_seq`` long): the cache is
+        treated as linear — writes past the cache end are dropped, and
+        candidate columns ``j > i`` (this call's future writes) are
         explicitly invisible to query ``i`` even when the age mask
-        saturates at a full cache — only columns that actually landed
-        count, so a dropped overflow write never shadows the old entry
-        that still lives at its wrapped index.
+        saturates at a full cache, so a dropped overflow write never
+        shadows the old entry that still lives at its wrapped index;
+      * ``ring=True`` (a sliding-window ring shorter than the stream,
+        e.g. the long_500k preset): every candidate write ring-wraps and
+        lands, and query ``i`` reads the **pre-write** value at a later
+        candidate's slot — the entry candidate ``j > i`` evicted is
+        still inside query ``i``'s window, exactly as plain decode saw
+        it.  The raw evicted columns are returned as an extra trailing
+        tuple ``(ev_k, ev_v[, ev_sk, ev_sv])`` of shape (B,K,...) so the
+        commit can restore the slots of rejected candidates.
 
     Per-query numerics are the plain :func:`decode_attention` ops at the
     same position, which is what keeps greedy spec decoding bit-identical
     to single-token decode.  With ``scale_k``/``scale_v`` the cache is the
     per-block int8 format (see :func:`decode_attention`): candidate scales
-    land beside their values with the same drop semantics, so a rejected
-    write's scale is just as invisible as its value until overwritten.
+    land beside their values with the same drop/wrap semantics, so a
+    rejected write's scale is just as invisible as its value until
+    overwritten.  ``ring`` must be a static Python bool (it selects the
+    traced program).  Callers guard ``K <= window`` in ring mode — a
+    single call must not wrap onto its own writes.
 
     Returns (ctx (B,K,Hq,dh), cache_k, cache_v) — plus the updated
-    (scale_k, scale_v) when per-block scales are in play.
+    (scale_k, scale_v) when per-block scales are in play, plus the
+    evicted-column tuple as the last element in ring mode.
     """
     b, kq, hq, dh = q.shape
     s_max = cache_k.shape[1]
@@ -342,17 +384,45 @@ def verify_attention(q: Array, k_new: Array, v_new: Array, cache_k: Array,
         k_w = quantize_kv(k_new) if quant else k_new.astype(cache_k.dtype)
         v_w = quantize_kv(v_new) if quant else v_new.astype(cache_v.dtype)
     rows = jnp.arange(b)[:, None]
-    # linear-cache write: out-of-range columns drop (never wrap)
-    cache_k = cache_k.at[rows, wpos].set(k_w, mode="drop")
-    cache_v = cache_v.at[rows, wpos].set(v_w, mode="drop")
-    if blocked:
-        scale_k = scale_k.at[rows, wpos].set(k_s, mode="drop")
-        scale_v = scale_v.at[rows, wpos].set(v_s, mode="drop")
+    old_keys = old_vals = None
+    evicted = ()
+    if ring:
+        # ring-cache write: every column wraps and lands; keep the
+        # pre-write view so earlier queries can still read what a later
+        # candidate evicted, and hand the raw evicted columns back so
+        # :func:`~repro.models.transformer.spec_commit` can restore the
+        # ones whose candidate the host rejects (a rejected wrapped
+        # write would otherwise shadow live history)
+        old_keys = (dequantize_blocked(cache_k, scale_k, q.dtype) if blocked
+                    else dequantize_kv(cache_k, q.dtype))
+        old_vals = (dequantize_blocked(cache_v, scale_v, q.dtype) if blocked
+                    else dequantize_kv(cache_v, q.dtype))
+        slots = jnp.mod(wpos, s_max)
+        evicted = (cache_k[rows, slots], cache_v[rows, slots])
+        if blocked:
+            evicted += (scale_k[rows, slots], scale_v[rows, slots])
+        cache_k = cache_k.at[rows, slots].set(k_w)
+        cache_v = cache_v.at[rows, slots].set(v_w)
+        if blocked:
+            scale_k = scale_k.at[rows, slots].set(k_s)
+            scale_v = scale_v.at[rows, slots].set(v_s)
+    else:
+        # linear-cache write: out-of-range columns drop (never wrap)
+        cache_k = cache_k.at[rows, wpos].set(k_w, mode="drop")
+        cache_v = cache_v.at[rows, wpos].set(v_w, mode="drop")
+        if blocked:
+            scale_k = scale_k.at[rows, wpos].set(k_s, mode="drop")
+            scale_v = scale_v.at[rows, wpos].set(v_s, mode="drop")
     keys = (dequantize_blocked(cache_k, scale_k, q.dtype) if blocked
             else dequantize_kv(cache_k, q.dtype))
     vals = (dequantize_blocked(cache_v, scale_v, q.dtype) if blocked
             else dequantize_kv(cache_v, q.dtype))
-    ctx = _attend_verify(q, keys, vals, posv, pol, window)
+    ctx = _attend_verify(q, keys, vals, posv, pol, window,
+                         old_keys=old_keys, old_vals=old_vals)
+    if ring:
+        if blocked:
+            return ctx, cache_k, cache_v, scale_k, scale_v, evicted
+        return ctx, cache_k, cache_v, evicted
     if blocked:
         return ctx, cache_k, cache_v, scale_k, scale_v
     return ctx, cache_k, cache_v

@@ -370,3 +370,29 @@ class Model:
 
 def build_model(cfg: ArchConfig) -> Model:
     return Model(cfg)
+
+
+def draft_arch(target: ArchConfig, n_layers: int = 2, d_model: int = 64,
+               n_heads: int = 2, d_ff: int = 256) -> ArchConfig:
+    """A tiny dense LM sharing ``target``'s token space, for drafting.
+
+    Speculative decoding only needs the draft and target vocabularies to
+    agree — everything else is chosen for cheapness: a 2-layer dense
+    attention stack with a linear cache (no MoE routing, no recurrent
+    leaves, no sliding window), which is exactly what
+    :class:`repro.runtime.drafter.DraftModelDrafter`'s position-reset
+    rollback requires.  RoPE theta follows the target so positional
+    geometry is at least family-resemblant on long prompts.
+    """
+    if target.input_kind != "tokens" or target.n_codebooks:
+        raise ValueError(f"cannot derive a token draft model from "
+                         f"{target.name!r} (input_kind="
+                         f"{target.input_kind!r}, n_codebooks="
+                         f"{target.n_codebooks})")
+    return ArchConfig(
+        name=f"{target.name}-draft", family="dense",
+        n_layers=n_layers, d_model=d_model, n_heads=n_heads,
+        n_kv_heads=n_heads, d_ff=d_ff, vocab_size=target.vocab_size,
+        rope_theta=target.rope_theta, tie_embeddings=True,
+        remat=False, dtype=target.dtype,
+    )

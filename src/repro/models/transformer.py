@@ -787,6 +787,13 @@ REC_FIELDS = ("x_prev", "cm_prev", "wkv", "conv_tail", "ssm_h")
 # field each one re-derives at spec_commit time
 _SCALE_FOR = {"wkv": "wkv_scale", "ssm_h": "ssm_scale"}
 
+# ring-cache verify: rec_stack keys carrying the raw evicted K/V columns
+# (L, B, K, ...) that spec_commit restores for rejected candidates, and
+# the cache field each one restores into
+_RING_KEYS = ("ring_k", "ring_v", "ring_sk", "ring_sv")
+_RING_FIELD = {"ring_k": "cache_k", "ring_v": "cache_v",
+               "ring_sk": "scale_k", "ring_sv": "scale_v"}
+
 
 def verify_step(params: Dict[str, Any], state: DecodeState,
                 batch: Dict[str, Array], cfg: ArchConfig,
@@ -807,11 +814,14 @@ def verify_step(params: Dict[str, Any], state: DecodeState,
     Returns ``(logits (B, K, V), state, rec_stack)``:
 
     * ``state``: K/V caches hold all K candidate writes (positions
-      ``pos..pos+K-1``, treated as linear — writes past the cache end are
-      dropped, never ring-wrapped) and ``pos`` is *unchanged* — nothing is
-      committed yet.  A rejected write sits past the committed ``pos`` and
-      stays invalid under the age mask until the real token at that
-      position overwrites it.
+      ``pos..pos+K-1``; linear caches drop writes past the cache end,
+      ring caches — allocations smaller than the stream, the long_500k
+      preset — wrap them, with the pre-write entry still readable by
+      earlier queries; see
+      :func:`~repro.models.attention.verify_attention`) and ``pos`` is
+      *unchanged* — nothing is committed yet.  A rejected write sits past
+      the committed ``pos`` (or, on a ring, at a slot the real token will
+      ring-write again on commit) and stays invisible until overwritten.
     * ``rec_stack``: per-step checkpoints of the recurrent fields
       (:data:`REC_FIELDS`), leading axis ``K+1`` where index ``j`` is the
       state after ``j`` accepted steps (0 = pre-verify).  Feed it to
@@ -829,6 +839,7 @@ def verify_step(params: Dict[str, Any], state: DecodeState,
     positions = (pos[:, None].astype(jnp.int32) + offs[None, :] if per_row
                  else pos.astype(jnp.int32) + offs)
     paged = getattr(state, "block_tables", None) is not None
+    ring = False
     if state.cache_k is not None:
         cache_len = state.cache_k.shape[2]
         if paged:   # pool (L,N,page,...): logical capacity is the table's
@@ -836,6 +847,10 @@ def verify_step(params: Dict[str, Any], state: DecodeState,
         if cfg.sliding_window and cache_len <= cfg.sliding_window:
             windows = jnp.full((cfg.n_layers,), cfg.sliding_window,
                                jnp.int32)
+            # the cache really is a ring (long_500k: allocation is the
+            # window, the stream is longer): candidate writes must wrap.
+            # Paged caches are linear by construction, never a ring.
+            ring = not paged
         else:
             windows = jnp.asarray(layer_windows(cfg, cache_len))
     else:
@@ -879,6 +894,7 @@ def verify_step(params: Dict[str, Any], state: DecodeState,
         h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
         q, k, v = A.qkv(h, _attn_params(bp, cfg), cfg, pol, positions)
         if paged:
+            ev = ()
             if qc:
                 ctx, ck2, cv2, sk2, sv2 = A.paged_verify_attention(
                     q, k, v, ck, cv, state.block_tables, pos, cfg, pol,
@@ -890,13 +906,24 @@ def verify_step(params: Dict[str, Any], state: DecodeState,
                     win)
                 new_caches = (ck2, cv2)
         elif qc:
-            ctx, ck2, cv2, sk2, sv2 = A.verify_attention(
-                q, k, v, ck, cv, pos, cfg, pol, win,
-                scale_k=sk_, scale_v=sv_)
+            if ring:
+                ctx, ck2, cv2, sk2, sv2, ev = A.verify_attention(
+                    q, k, v, ck, cv, pos, cfg, pol, win,
+                    scale_k=sk_, scale_v=sv_, ring=True)
+            else:
+                ctx, ck2, cv2, sk2, sv2 = A.verify_attention(
+                    q, k, v, ck, cv, pos, cfg, pol, win,
+                    scale_k=sk_, scale_v=sv_)
+                ev = ()
             new_caches = (ck2, cv2, sk2, sv2)
         else:
-            ctx, ck2, cv2 = A.verify_attention(q, k, v, ck, cv, pos, cfg,
-                                               pol, win)
+            if ring:
+                ctx, ck2, cv2, ev = A.verify_attention(
+                    q, k, v, ck, cv, pos, cfg, pol, win, ring=True)
+            else:
+                ctx, ck2, cv2 = A.verify_attention(q, k, v, ck, cv, pos,
+                                                   cfg, pol, win)
+                ev = ()
             new_caches = (ck2, cv2)
         attn_out = L.dense(ctx.reshape(b, kq, -1), bp["attn"]["wo"], pol)
         new_extra = ()
@@ -931,7 +958,7 @@ def verify_step(params: Dict[str, Any], state: DecodeState,
         else:
             x = x + L.swiglu(h, bp["ffn"]["w_gate"], bp["ffn"]["w_up"],
                              bp["ffn"]["w_down"], pol, cfg.activation)
-        return x, new_caches + new_extra
+        return x, new_caches + new_extra + ev
 
     def stack(pre, steps):
         # steps (L, B, K, ...) stacked by the layer scan -> checkpoint
@@ -962,8 +989,8 @@ def verify_step(params: Dict[str, Any], state: DecodeState,
                      "wkv": stack(wkv_pre, wkv_steps)}
     elif cfg.family == "hybrid":
         if qc:
-            x, (ck, cv, sk, sv, tail, hh, hh_s, tail_steps,
-                h_steps) = jax.lax.scan(
+            x, (ck, cv, sk, sv, tail, hh, hh_s, tail_steps, h_steps,
+                *ring_ev) = jax.lax.scan(
                 body, x, (params["blocks"], state.cache_k, state.cache_v,
                           state.scale_k, state.scale_v, windows,
                           state.conv_tail, state.ssm_h, state.ssm_scale))
@@ -972,7 +999,8 @@ def verify_step(params: Dict[str, Any], state: DecodeState,
                                        ssm_scale=hh_s)
             h_pre = dequantize_blocked(state.ssm_h, state.ssm_scale)
         else:
-            x, (ck, cv, tail, hh, tail_steps, h_steps) = jax.lax.scan(
+            x, (ck, cv, tail, hh, tail_steps, h_steps,
+                *ring_ev) = jax.lax.scan(
                 body, x, (params["blocks"], state.cache_k, state.cache_v,
                           windows, state.conv_tail, state.ssm_h))
             new_state = state._replace(cache_k=ck, cache_v=cv,
@@ -980,18 +1008,20 @@ def verify_step(params: Dict[str, Any], state: DecodeState,
             h_pre = state.ssm_h
         rec_stack = {"conv_tail": stack(state.conv_tail, tail_steps),
                      "ssm_h": stack(h_pre, h_steps)}
+        rec_stack.update(zip(_RING_KEYS, ring_ev))
     else:
         if qc:
-            x, (ck, cv, sk, sv) = jax.lax.scan(
+            x, (ck, cv, sk, sv, *ring_ev) = jax.lax.scan(
                 body, x, (params["blocks"], state.cache_k, state.cache_v,
                           state.scale_k, state.scale_v, windows))
             new_state = state._replace(cache_k=ck, cache_v=cv, scale_k=sk,
                                        scale_v=sv)
         else:
-            x, (ck, cv) = jax.lax.scan(
+            x, (ck, cv, *ring_ev) = jax.lax.scan(
                 body, x, (params["blocks"], state.cache_k, state.cache_v,
                           windows))
             new_state = state._replace(cache_k=ck, cache_v=cv)
+        rec_stack.update(zip(_RING_KEYS, ring_ev))
 
     x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
     logits = L.dense(x, params["lm_head"], pol)
@@ -1040,11 +1070,38 @@ def spec_commit(state: DecodeState, rec_stack: Dict[str, Array],
     (accepted drafts + 1, or 0 for rows that must not move — e.g. empty
     serving slots).  ``pos`` advances by it and every recurrent field is
     gathered from its ``rec_stack`` checkpoint at that index — the rollback
-    for rejected tokens.  K/V caches pass through: rejected writes sit past
-    the committed ``pos`` and stay masked until overwritten.
+    for rejected tokens.  Linear K/V caches pass through: rejected writes
+    sit past the committed ``pos`` and stay masked until overwritten.  On
+    a ring cache the rejected candidates' wrapped writes evicted live
+    history, so ``rec_stack`` additionally carries the raw evicted columns
+    (:data:`_RING_KEYS`) and the commit scatters them back into every slot
+    past each row's accepted prefix.
     """
     advance = jnp.asarray(advance, jnp.int32)
+    ring_cols = {k: rec_stack[k] for k in _RING_KEYS if k in rec_stack}
+    rec_stack = {k: v for k, v in rec_stack.items() if k not in ring_cols}
     out: Dict[str, Any] = {"pos": state.pos + advance.astype(state.pos.dtype)}
+    for name, ev in ring_cols.items():            # ev (L, B, K, ...)
+        cache = getattr(state, _RING_FIELD[name])
+        nb, kq = ev.shape[1], ev.shape[2]
+        s_max = cache.shape[2]
+        offs = jnp.arange(kq, dtype=jnp.int32)
+        if jnp.ndim(advance) == 0:
+            slots = jnp.mod(state.pos.astype(jnp.int32) + offs, s_max)
+            rej = offs >= advance                              # (K,)
+            cur = cache[:, :, slots]                           # (L,B,K,...)
+            sel = rej.reshape((1, 1, kq) + (1,) * (ev.ndim - 3))
+            out[_RING_FIELD[name]] = cache.at[:, :, slots].set(
+                jnp.where(sel, ev, cur))
+        else:
+            posv = jnp.broadcast_to(state.pos, (nb,)).astype(jnp.int32)
+            slots = jnp.mod(posv[:, None] + offs[None, :], s_max)  # (B,K)
+            rej = offs[None, :] >= advance[:, None]                # (B,K)
+            rows = jnp.arange(nb)[:, None]
+            cur = cache[:, rows, slots]                        # (L,B,K,...)
+            sel = rej.reshape((1, nb, kq) + (1,) * (ev.ndim - 3))
+            out[_RING_FIELD[name]] = cache.at[:, rows, slots].set(
+                jnp.where(sel, ev, cur))
     for name, stack in rec_stack.items():         # stack (K+1, L, B, ...)
         if jnp.ndim(advance) == 0:
             picked = stack[advance]

@@ -25,16 +25,26 @@ model-level seam masks pad steps out of recurrent state updates and each
 slot decodes against its own positions (see ``tests/test_serving.py``).
 
 **Speculative decoding** (``spec_k > 0``): a pluggable drafter
-(``runtime/drafter.py``; n-gram prompt lookup by default, a draft-model
-hook for later) proposes up to ``k`` tokens per slot and one bucketed
-``verify_step`` call scores all ``k+1`` positions in a single pass —
-per-query verify numerics are the exact single-token decode ops, so
-greedy outputs stay bit-identical to plain decode while accepted
-prefixes advance a slot by up to ``k+1`` tokens per engine step (greedy
-engines fuse verify + longest-prefix accept + commit into one program).
-Temperature slots use the rejection-sampling fallback (see
-``_accept_sampled``).  Acceptance bookkeeping lands in
-``metrics["spec_acceptance"]`` / ``metrics["tokens_per_step"]``.
+(``runtime/drafter.py``; n-gram prompt lookup by default,
+``drafter="draft_model"`` for the tiered tiny-LM drafter) proposes up to
+``k`` tokens per slot and one bucketed ``verify_step`` call scores all
+``k+1`` positions in a single pass — per-query verify numerics are the
+exact single-token decode ops, so greedy outputs stay bit-identical to
+plain decode while accepted prefixes advance a slot by up to ``k+1``
+tokens per engine step (greedy engines fuse verify + longest-prefix
+accept + commit into one program).  Batched drafters
+(``Drafter.batched``) get one ``draft_all`` call covering every drafting
+slot per step instead of per-slot sessions.  Ring caches (long-context
+sliding-window presets) verify too: candidate columns wrap on write and
+rejected wrapped writes restore on commit, so the only constraint is
+that the ``k+1`` verify window fits the ring.  With ``spec_adaptive``,
+each slot tracks a trailing-acceptance EWMA and walks its own draft
+budget between 0 (plain decode, which is already the engine's free
+fallback) and ``spec_k_max`` — undraftable traffic stops paying verify
+width, draftable traffic keeps the full window.  Temperature slots use
+the rejection-sampling fallback (see ``_accept_sampled``).  Acceptance
+bookkeeping lands in the typed :class:`ServeMetrics`
+(``spec_acceptance`` / ``tokens_per_step`` / ``spec_k_hist``).
 
 ``GangServeEngine`` preserves the previous lockstep scheduler as the
 benchmark baseline (``benchmarks/serve_bench.py`` replays the same trace
@@ -58,7 +68,8 @@ from repro.kernels import common as kernel_common
 from repro.models.model_zoo import Model
 from repro.parallel.fault_tolerance import WorkerKilled
 from repro.runtime.block_pool import BlockAllocator, RadixCache
-from repro.runtime.drafter import Drafter, DraftSession, NGramDrafter
+from repro.runtime.drafter import (Drafter, DraftSession, NGramDrafter,
+                                   make_drafter)
 
 # Serving snapshot format version (bumped on any layout/meta change; a
 # restore refuses snapshots it does not understand instead of guessing).
@@ -122,8 +133,15 @@ class ServeConfig:
     max_seq: int = 256
     greedy: bool = True
     min_bucket: int = 16
+    # speculative decoding: spec_k > 0 turns it on; drafter is a Drafter
+    # instance or a factory name ("ngram" | "draft_model", resolved by
+    # the engine through runtime.drafter.make_drafter); spec_adaptive
+    # walks each slot's draft budget between 0 and spec_k_max (defaults
+    # to spec_k) by trailing acceptance
     spec_k: int = 0
-    drafter: Optional[Drafter] = None
+    spec_k_max: Optional[int] = None
+    spec_adaptive: bool = False
+    drafter: Optional[Any] = None          # Drafter | "ngram" | "draft_model"
     cache_dtype: Optional[str] = None      # legacy string; prefer `cache`
     cache: Optional[CacheSpec] = None
     num_blocks: Optional[int] = None
@@ -148,6 +166,21 @@ class ServeConfig:
                              f"{self.min_bucket}")
         if self.spec_k < 0:
             raise ValueError(f"spec_k must be >= 0, got {self.spec_k}")
+        if self.spec_k_max is not None:
+            if self.spec_k < 1:
+                raise ValueError("spec_k_max needs spec_k > 0 (spec_k is "
+                                 "the starting draft budget, spec_k_max "
+                                 "the adaptive ceiling)")
+            if self.spec_k_max < self.spec_k:
+                raise ValueError(f"spec_k_max {self.spec_k_max} must be "
+                                 f">= spec_k {self.spec_k}")
+        if self.spec_adaptive and self.spec_k < 1:
+            raise ValueError("spec_adaptive needs spec_k > 0")
+        if (isinstance(self.drafter, str)
+                and self.drafter not in ("ngram", "draft_model")):
+            raise ValueError(f"unknown drafter name {self.drafter!r}; "
+                             f"expected 'ngram' or 'draft_model' (or pass "
+                             f"a Drafter instance)")
         if self.cache is not None and self.cache_dtype is not None:
             raise ValueError("cache (a CacheSpec) and the legacy "
                              "cache_dtype string are two spellings of the "
@@ -182,6 +215,191 @@ class ServeConfig:
         if self.prefill_workers < 0:
             raise ValueError(f"prefill_workers must be >= 0, got "
                              f"{self.prefill_workers}")
+
+    # -- shared CLI plumbing -------------------------------------------------
+    # launch/serve.py and examples/serve_batch.py used to carry identical
+    # copies of these flags and their cross-checks; the one spelling lives
+    # here now (add_args -> check_args -> from_args).
+
+    @staticmethod
+    def add_args(ap) -> None:
+        """Install the engine's shared flags on an ArgumentParser."""
+        ap.add_argument("--max-batch", type=int, default=4)
+        ap.add_argument("--max-seq", type=int, default=256)
+        ap.add_argument("--spec", type=int, default=0, metavar="K",
+                        help="speculative decoding: draft K tokens per "
+                             "slot per step (greedy outputs stay "
+                             "bit-identical to plain decode)")
+        ap.add_argument("--spec-k-max", type=int, default=None,
+                        metavar="K", help="adaptive draft-budget ceiling "
+                        "(defaults to --spec; implies a K+1-wide verify "
+                        "window)")
+        ap.add_argument("--spec-adaptive", action="store_true",
+                        help="walk each slot's draft budget between 0 and "
+                             "--spec-k-max by trailing acceptance")
+        ap.add_argument("--drafter", choices=("ngram", "draft_model"),
+                        default=None,
+                        help="drafter tier: n-gram prompt lookup "
+                             "(default) or the batched tiny-LM drafter "
+                             "with n-gram fallback")
+        ap.add_argument("--paged", action="store_true",
+                        help="paged slot memory + radix prefix cache: K/V "
+                             "lives in a shared block pool, shared-prefix "
+                             "admissions reuse already-prefilled pages")
+        ap.add_argument("--page-size", type=int, default=16,
+                        help="tokens per cache page (--paged)")
+        ap.add_argument("--snapshot-dir", default=None, metavar="DIR",
+                        help="slot snapshot directory: enables periodic "
+                             "snapshots and (with --kill-at-step) "
+                             "preempt-and-resume")
+        ap.add_argument("--snapshot-every", type=int, default=8,
+                        metavar="STEPS",
+                        help="snapshot cadence in decode steps "
+                             "(--snapshot-dir)")
+        ap.add_argument("--kill-at-step", type=int, default=None,
+                        metavar="N",
+                        help="chaos: kill the worker after decode step N "
+                             "and let the supervisor restore + resume "
+                             "(needs --snapshot-dir)")
+        ap.add_argument("--mesh-shards", type=int, default=0, metavar="N",
+                        help="shard the slot state over an N-way mesh "
+                             "data axis (MeshServeEngine; outputs stay "
+                             "bit-identical; fake devices on CPU with "
+                             "XLA_FLAGS=--xla_force_host_platform_"
+                             "device_count=N)")
+        ap.add_argument("--prefill-workers", type=int, default=0,
+                        metavar="N",
+                        help="run dense prefills on N worker threads off "
+                             "the decode critical path (needs "
+                             "--mesh-shards; paged admissions stay "
+                             "inline)")
+
+    @staticmethod
+    def check_args(ap, args, gang: bool = False) -> None:
+        """The cross-flag ap.error checks both serving CLIs share.
+        ``gang`` is the caller's --gang value (the lockstep baseline
+        supports none of the engine features)."""
+        if gang:
+            for flag, name in ((args.spec, "--spec"),
+                               (args.paged, "--paged"),
+                               (args.snapshot_dir, "--snapshot-dir"),
+                               (args.mesh_shards, "--mesh-shards")):
+                if flag:
+                    ap.error(f"{name} needs the continuous engine "
+                             f"(drop --gang)")
+        if args.kill_at_step is not None and not args.snapshot_dir:
+            ap.error("--kill-at-step needs --snapshot-dir to recover from")
+        if args.prefill_workers and not args.mesh_shards:
+            ap.error("--prefill-workers needs --mesh-shards")
+        if (args.drafter or args.spec_k_max or args.spec_adaptive) \
+                and not args.spec:
+            ap.error("--drafter/--spec-k-max/--spec-adaptive need --spec K")
+
+    @classmethod
+    def from_args(cls, args, incarnation: int = 0,
+                  **overrides) -> "ServeConfig":
+        """Build a ServeConfig from ``add_args``-parsed flags.
+
+        ``incarnation`` guards the injected fault: only the first engine
+        a supervisor spawns carries ``kill_at_step`` (the respawn must
+        run the trace to completion).  ``overrides`` replace any derived
+        kwarg (e.g. a caller-adjusted ``max_seq`` or custom ``cache``).
+        """
+        kw = dict(
+            max_batch=args.max_batch, max_seq=args.max_seq,
+            spec_k=args.spec, spec_k_max=args.spec_k_max,
+            spec_adaptive=args.spec_adaptive, drafter=args.drafter,
+            cache=(CacheSpec(paged=True, page_size=args.page_size)
+                   if args.paged else None),
+            num_shards=args.mesh_shards or None,
+            prefill_workers=args.prefill_workers,
+            snapshot_dir=args.snapshot_dir,
+            snapshot_every=(args.snapshot_every if args.snapshot_dir
+                            else 0),
+            kill_at_step=(args.kill_at_step if incarnation == 0
+                          else None))
+        kw.update(overrides)
+        return cls(**kw)
+
+
+@dataclasses.dataclass
+class ServeMetrics:
+    """Typed engine metrics (one field per counter the dict used to hold).
+
+    The engine historically exposed ``metrics`` as a plain dict, and the
+    benches/gates index it with strings — so this dataclass keeps the
+    mapping surface (``m["key"]``, ``"key" in m``, ``m.get``) over its
+    typed fields, routes unknown keys to ``extras`` (the mesh engine's
+    ``async_prefills`` lives there), and ``to_dict()`` flattens back to
+    the exact dict shape the bench JSON writers have always serialized.
+    """
+
+    # token/step counters (accumulate over the engine lifetime)
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+    decode_steps: int = 0
+    # per-serve() averages/rates (recomputed at the end of each call)
+    queue_wait_s: float = 0.0
+    slot_occupancy: float = 0.0
+    wall_s: float = 0.0
+    tok_s: float = 0.0
+    # speculative decode: drafted vs accepted counters, derived rates,
+    # tier dispatch counts, and the per-slot draft-budget histogram
+    # (spec_k value -> slot-steps spent at that budget)
+    spec_steps: int = 0
+    draft_tokens: int = 0
+    draft_accepted: int = 0
+    spec_acceptance: float = 0.0
+    tokens_per_step: float = 0.0
+    model_drafts: int = 0
+    fallback_drafts: int = 0
+    spec_k_hist: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # paged mode: prompt tokens served from the radix prefix cache and
+    # the block pool's high-water mark
+    prefix_hit_tokens: int = 0
+    peak_blocks: int = 0
+    # mesh mode: decode steps taken while a prefill was in flight
+    overlap_steps: int = 0
+    # backpressure + fault tolerance
+    queue_depth: int = 0
+    peak_queue_depth: int = 0
+    shed_count: int = 0
+    timeout_count: int = 0
+    snapshots: int = 0
+    snapshot_s: float = 0.0
+    restore_s: float = 0.0
+    # escape hatch for engine subclasses (ServeMetrics is the base
+    # engine's contract; a subclass counter is not a schema change)
+    extras: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def _is_field(self, key: str) -> bool:
+        return key in self.__dataclass_fields__ and key != "extras"
+
+    def __getitem__(self, key: str):
+        if self._is_field(key):
+            return getattr(self, key)
+        return self.extras[key]
+
+    def __setitem__(self, key: str, value) -> None:
+        if self._is_field(key):
+            setattr(self, key, value)
+        else:
+            self.extras[key] = value
+
+    def __contains__(self, key: str) -> bool:
+        return self._is_field(key) or key in self.extras
+
+    def get(self, key: str, default=None):
+        return self[key] if key in self else default
+
+    def to_dict(self) -> Dict[str, Any]:
+        """The flat dict the bench JSON writers serialize (bit-compatible
+        with the pre-dataclass metrics dict, plus the new fields)."""
+        d = {k: getattr(self, k) for k in self.__dataclass_fields__
+             if k not in ("extras", "spec_k_hist")}
+        d["spec_k_hist"] = dict(self.spec_k_hist)
+        d.update(self.extras)
+        return d
 
 
 @dataclasses.dataclass
@@ -221,6 +439,12 @@ class _Slot:
     # host mirror of the device-side committed position (tokens in cache);
     # drives paged-mode page allocation ahead of each step's writes
     pos: int = 0
+    # adaptive speculative decoding: trailing-acceptance EWMA, the slot's
+    # current draft budget (0 = plain decode), and the probe countdown
+    # that lets a k=0 slot periodically re-test draftability
+    spec_ewma: float = 0.5
+    spec_k: int = 0
+    spec_probe: int = 0
 
 
 @dataclasses.dataclass
@@ -333,23 +557,35 @@ class ServeEngine:
             raise ValueError("speculative decoding needs a plain token "
                              "vocabulary (input_kind='tokens', no "
                              "codebook factorisation)")
-        if spec_k:
+        k_max = int(config.spec_k_max or spec_k)
+        if spec_k and not self.paged:
             # derive the ring-cache predicate from the allocation itself
             # (abstract: no memory): a slot K/V cache shorter than max_seq
-            # is a ring, and verify_attention's linear-cache writes are
-            # deliberately wrong there (ROADMAP: ring-cache verify is an
-            # open item) — refuse, don't corrupt.  Paged caches are linear
-            # by construction (their init refuses ring configs).
+            # is a ring.  Ring verify wraps candidate writes and restores
+            # rejected wrapped columns on commit (models/attention.py),
+            # so the one hard constraint left is that the whole k+1
+            # verify window fits the ring — wider would evict columns the
+            # same verify still reads.  Paged caches are linear by
+            # construction (their init refuses ring configs).
             abs_state = self.ops.init_slot_state(max_batch, max_seq,
                                                  abstract=True)
-            if (not self.paged and abs_state.cache_k is not None
-                    and abs_state.cache_k.shape[2] < max_seq):
-                raise ValueError("speculative decoding over ring caches "
-                                 "(long-context sliding-window decode) is "
-                                 "not supported; lower max_seq or drop "
-                                 "spec_k")
+            if (abs_state.cache_k is not None
+                    and abs_state.cache_k.shape[2] < max_seq
+                    and k_max + 1 > abs_state.cache_k.shape[2]):
+                raise ValueError(
+                    f"speculative verify window k+1={k_max + 1} exceeds "
+                    f"the sliding-window ring cache "
+                    f"({abs_state.cache_k.shape[2]} slots); lower "
+                    f"spec_k/spec_k_max below the window")
         self.spec_k = int(spec_k)
-        self.drafter = (drafter or NGramDrafter()) if spec_k else drafter
+        self.spec_k_max = k_max
+        self.spec_adaptive = bool(config.spec_adaptive)
+        if spec_k and isinstance(drafter, str):
+            # factory names resolve here because the draft-model tier
+            # needs the serving model to derive its tiny LM from
+            drafter = make_drafter(drafter, target=model,
+                                   max_batch=max_batch, max_seq=max_seq)
+        self.drafter = (drafter or NGramDrafter()) if spec_k else None
         # Warm boot: pull the persistent tuned-block table (written by
         # `python -m benchmarks.tune`) into the substrate before the first
         # trace, so serving never re-derives — or worse, never measures —
@@ -449,28 +685,9 @@ class ServeEngine:
         # request retired straight from prefill (1-token budget)
         self.events: List[tuple] = []
         self.step_walls: List[float] = []
-        self.metrics: Dict[str, float] = {
-            "prefill_tokens": 0, "decode_tokens": 0, "decode_steps": 0,
-            "queue_wait_s": 0.0, "slot_occupancy": 0.0,
-            # speculative decode: drafted vs accepted counters plus the
-            # derived spec_acceptance / tokens_per_step rates (recomputed
-            # at the end of every serve() call)
-            "spec_steps": 0, "draft_tokens": 0, "draft_accepted": 0,
-            "spec_acceptance": 0.0, "tokens_per_step": 0.0,
-            # paged mode: prompt tokens served from the radix prefix cache
-            # (prefill compute that never ran) and the block pool's
-            # high-water mark (resident cache memory in pages)
-            "prefix_hit_tokens": 0, "peak_blocks": 0,
-            # mesh mode: decode steps taken while a prefill was in flight
-            # (0 whenever admissions run inline)
-            "overlap_steps": 0,
-            # backpressure + fault tolerance: arrived-but-unadmitted queue
-            # depth (instantaneous / high-water), shed + deadline-expired
-            # request counts, snapshot/restore work
-            "queue_depth": 0, "peak_queue_depth": 0,
-            "shed_count": 0, "timeout_count": 0,
-            "snapshots": 0, "snapshot_s": 0.0, "restore_s": 0.0,
-        }
+        # typed metrics; keeps the historical dict surface (see
+        # ServeMetrics) so benches and gates index it unchanged
+        self.metrics = ServeMetrics()
         self._occ_num = 0
         self._occ_den = 0
         self._wait_sum = 0.0
@@ -570,6 +787,11 @@ class ServeEngine:
 
     def _retire(self, i: Optional[int], slot: _Slot, done: List[Request]
                 ) -> None:
+        if slot.session is not None:
+            # explicit close() is the drafter API's retire contract:
+            # batched drafters free the request's device-side row
+            slot.session.close()
+            slot.session = None
         r = slot.req
         r.output = np.asarray(slot.tokens[:r.max_new_tokens])
         r.done_at = time.monotonic()
@@ -786,8 +1008,10 @@ class ServeEngine:
             slot.tokens.append(slot.next_token)
             slot.produced = 1
             if self.spec_k:
+                slot.spec_k = self.spec_k
                 slot.session = self.drafter.begin(
-                    [int(t) for t in r.prompt] + [slot.next_token])
+                    [int(t) for t in r.prompt] + [slot.next_token],
+                    slot=slot_i, rid=r.rid)
             if self.radix is not None and len(r.prompt) // page:
                 # register this prompt's full pages; snapshot recurrent
                 # state at each page boundary from the extend checkpoints
@@ -870,8 +1094,10 @@ class ServeEngine:
             slot.tokens.append(slot.next_token)
             slot.produced = 1
             if self.spec_k:
+                slot.spec_k = self.spec_k
                 slot.session = self.drafter.begin(
-                    [int(t) for t in r.prompt] + [slot.next_token])
+                    [int(t) for t in r.prompt] + [slot.next_token],
+                    slot=free[j], rid=r.rid)
             if slot.produced >= r.max_new_tokens:
                 self._retire(None, slot, done)     # 1-token request
             else:
@@ -959,26 +1185,67 @@ class ServeEngine:
         out.append(int(slot.rng.choice(len(p), p=p)))
         return out
 
+    # adaptive spec_k: EWMA smoothing weight, the shrink/grow thresholds
+    # (hysteresis band between them holds k steady), and how many steps a
+    # k=0 slot rides plain decode before probing with a single draft
+    _SPEC_ALPHA = 0.3
+    _SPEC_LO = 0.2
+    _SPEC_HI = 0.5
+    _PROBE_EVERY = 16
+
+    def _want_k(self, slot: _Slot) -> int:
+        """This step's draft budget for one slot.  Fixed engines always
+        ask for the full window; adaptive engines ask for the slot's
+        current budget, with a periodic 1-token probe out of k=0 so a
+        workload that turns draftable can climb back."""
+        if not self.spec_adaptive:
+            return self.spec_k_max
+        if slot.spec_k == 0:
+            slot.spec_probe += 1
+            if slot.spec_probe >= self._PROBE_EVERY:
+                slot.spec_probe = 0
+                return 1
+            return 0
+        return slot.spec_k
+
     def _spec_step(self, active: List[int], done: List[Request]) -> None:
         """One speculative engine step: draft, verify, commit, retire.
 
-        Fixed shapes keep one verify trace: every step scores (B, k+1)
-        tokens; slots with fewer (or no) drafts pad the window and simply
-        fail to match there.  Rejected positions roll back on commit —
-        recurrent state to its per-step checkpoint, K/V writes stay
-        masked until the real token overwrites them (see
-        ``models/transformer.py::verify_step``)."""
+        Fixed shapes keep one verify trace: every step scores
+        (B, spec_k_max+1) tokens; slots with fewer (or no) drafts pad the
+        window and simply fail to match there.  Rejected positions roll
+        back on commit — recurrent state to its per-step checkpoint,
+        linear-cache K/V writes stay masked until the real token
+        overwrites them, ring-cache wrapped writes restore their evicted
+        columns (see ``models/transformer.py::verify_step``).  Batched
+        drafters draft every participating slot in one ``draft_all``
+        call; adaptive engines drop low-acceptance slots to k=0, which
+        routes whole steps to the (cheaper) plain program below."""
         b = self.max_batch
-        k = self.spec_k
+        k = self.spec_k_max
         toks = np.zeros((b, k + 1), np.int32)
         # per-row ceiling on accepted drafts: real draft count and what is
         # left of the budget after the correction/bonus token; -1 keeps
         # empty slots from advancing at all
         caps = np.full((b,), -1, np.int32)
         drafts: Dict[int, List[int]] = {}
+        hist = self.metrics.spec_k_hist
+        want: Dict[int, int] = {}
         for i in active:
             slot = self._slots[i]
-            d = slot.session.draft(k)[:k]
+            hist[slot.spec_k] = hist.get(slot.spec_k, 0) + 1
+            want[i] = max(0, min(self._want_k(slot),
+                                 slot.req.max_new_tokens - slot.produced
+                                 - 1))
+        if getattr(self.drafter, "batched", False):
+            got = self.drafter.draft_all(
+                {i: w for i, w in want.items() if w > 0})
+        else:
+            got = {i: self._slots[i].session.draft(w)
+                   for i, w in want.items() if w > 0}
+        for i in active:
+            slot = self._slots[i]
+            d = got.get(i, [])[:want[i]]
             drafts[i] = d
             toks[i, 0] = slot.next_token
             if d:
@@ -1038,6 +1305,17 @@ class ServeEngine:
         for i in active:
             slot = self._slots[i]
             out = emitted[i]
+            if self.spec_adaptive and drafts[i]:
+                # trailing-acceptance EWMA drives the slot's budget:
+                # below the low-water mark shrink toward 0 (plain decode,
+                # already the engine's free fallback), above the
+                # high-water mark grow back toward spec_k_max
+                rate = (len(out) - 1) / len(drafts[i])
+                slot.spec_ewma += self._SPEC_ALPHA * (rate - slot.spec_ewma)
+                if slot.spec_ewma < self._SPEC_LO:
+                    slot.spec_k = max(0, slot.spec_k - 1)
+                elif slot.spec_ewma > self._SPEC_HI:
+                    slot.spec_k = min(self.spec_k_max, slot.spec_k + 1)
             slot.tokens.extend(out)
             slot.session.extend(out)
             slot.produced += len(out)
@@ -1388,8 +1666,10 @@ class ServeEngine:
                          produced=e.produced, tokens=list(e.tokens),
                          rng=rng, pos=e.pos)
             if self.spec_k:
+                slot.spec_k = self.spec_k
                 slot.session = self.drafter.begin(
-                    [int(t) for t in r.prompt] + slot.tokens[:1])
+                    [int(t) for t in r.prompt] + slot.tokens[:1],
+                    slot=slot_i, rid=r.rid)
                 if len(slot.tokens) > 1:
                     slot.session.extend(slot.tokens[1:])
             self._slots[slot_i] = slot
@@ -1609,6 +1889,15 @@ class ServeEngine:
         self.metrics["tokens_per_step"] = (
             self.metrics["decode_tokens"]
             / max(self.metrics["decode_steps"], 1))
+        self.metrics["wall_s"] = time.monotonic() - t0
+        self.metrics["tok_s"] = (
+            sum(len(r.output) for r in done if r.output is not None)
+            / max(self.metrics["wall_s"], 1e-9))
+        # tiered drafters expose which tier served each drafting slot-step
+        self.metrics["model_drafts"] = int(
+            getattr(self.drafter, "model_dispatches", 0))
+        self.metrics["fallback_drafts"] = int(
+            getattr(self.drafter, "fallback_dispatches", 0))
         return done
 
 

@@ -9,7 +9,15 @@
   * **Per-slot mixed acceptance** — one batch can advance every slot by a
     different 0..k+1 without cross-talk.
   * **Drafter** — n-gram prompt lookup proposes through runs/cycles,
-    rolls its speculative index back, and never exceeds k.
+    rolls its speculative index back, and never exceeds k; the
+    draft-model drafter reproduces its model's greedy chain and tiers
+    down to the n-gram fallback when the model has no signal.
+  * **Ring caches** — the long-context sliding-window preset verifies
+    too: outputs stay bit-exact at and past the window boundary, and
+    only a verify window wider than the ring is refused.
+  * **Adaptive spec_k** — per-slot draft budgets walk to 0 on
+    undraftable traffic (cutting verify dispatches) and back to
+    spec_k_max on draftable traffic.
   * **Metrics** — spec_acceptance / tokens_per_step bookkeeping is sane
     and token conservation holds.
 """
@@ -19,9 +27,10 @@ import numpy as np
 import pytest
 
 from repro.configs import get_arch
-from repro.models.model_zoo import build_model
-from repro.runtime.drafter import Drafter, DraftSession, NGramDrafter
-from repro.runtime.serve_loop import Request, ServeEngine
+from repro.models.model_zoo import build_model, draft_arch
+from repro.runtime.drafter import (DraftModelDrafter, Drafter, DraftSession,
+                                   NGramDrafter, make_drafter)
+from repro.runtime.serve_loop import Request, ServeConfig, ServeEngine
 
 MAX_SEQ = 64
 
@@ -169,7 +178,7 @@ class _ScriptedDrafter(Drafter):
     def __init__(self, streams):
         self.streams = streams          # first-token -> oracle stream
 
-    def begin(self, context):
+    def begin(self, context, slot=None, rid=None):
         key = context[0]
         if key in self.streams:
             return _ScriptedSession(self.streams[key][1:])  # after tok 1
@@ -301,21 +310,54 @@ class _EmptyDrafter(Drafter):
     """A drafter that never proposes — every step must take the plain
     single-token program, not a degenerate (B, k+1) verify."""
 
-    def begin(self, context):
+    def begin(self, context, slot=None, rid=None):
         return _EmptySession()
 
 
-def test_ring_cache_spec_refusal(served):
+RING_SEQ = 131072   # hymba reduced: sliding_window=32 -> 32-slot ring
+
+
+def test_ring_cache_spec_greedy_bitexact(served):
     """Long-context sliding-window decode stores a ring K/V cache whose
-    seq axis is shorter than max_seq; verify_step's masked scatter would
-    be silently wrong there, so the engine must refuse spec_k up front
-    (abstract shape check — no 128k allocation happens)."""
+    seq axis is shorter than max_seq.  Ring verify wraps candidate
+    writes and restores rejected wrapped columns on commit, so greedy
+    spec outputs must stay bit-identical to plain ring decode — at and
+    well past the window boundary (prompt + output > window means every
+    late step verifies against a fully wrapped ring)."""
     cfg, model, params, _ = served("hymba-1.5b")
     assert cfg.sliding_window and cfg.supports_long_context
-    with pytest.raises(ValueError, match="ring caches"):
-        ServeEngine(model, params, max_batch=2, max_seq=131072, spec_k=4)
-    # without speculation the same config is served (ring decode works)
-    ServeEngine(model, params, max_batch=2, max_seq=131072)
+    window = cfg.sliding_window
+    # outputs cross the eviction boundary: 20 + 30 tokens > 32 window
+    reqs = lambda: _mixed_requests(cfg, lens=[20, 7, 26],
+                                   max_news=[30, 40, 18], seed=6)
+    plain = ServeEngine(model, params, ServeConfig(max_batch=2,
+                                                   max_seq=RING_SEQ))
+    ref = {r.rid: list(r.output) for r in plain.serve(reqs())}
+    spec = ServeEngine(model, params, ServeConfig(max_batch=2,
+                                                  max_seq=RING_SEQ,
+                                                  spec_k=4))
+    st = spec._init_state()
+    assert st.cache_k.shape[2] == window     # really a ring allocation
+    done = spec.serve(reqs())
+    for r in done:
+        assert list(r.output) == ref[r.rid], r.rid
+    assert max(len(r.prompt) + len(r.output) for r in done) > window
+    # speculation engaged on the ring (motif-free prompts still draft
+    # occasionally; conservation is the hard check above)
+    assert spec.metrics["decode_steps"] > 0
+
+
+def test_ring_cache_spec_window_guard(served):
+    """The one remaining ring constraint: a k+1 verify window wider than
+    the ring would evict columns the same verify still reads — refused
+    up front (abstract shape check, no 128k allocation)."""
+    cfg, model, params, _ = served("hymba-1.5b")
+    with pytest.raises(ValueError, match="verify window"):
+        ServeEngine(model, params, ServeConfig(
+            max_batch=2, max_seq=RING_SEQ, spec_k=cfg.sliding_window))
+    # at the boundary (k+1 == window) and below, construction succeeds
+    ServeEngine(model, params, ServeConfig(
+        max_batch=2, max_seq=RING_SEQ, spec_k=cfg.sliding_window - 1))
 
 
 def test_no_draft_fallback_zero_verify_dispatches(served):
@@ -334,6 +376,170 @@ def test_no_draft_fallback_zero_verify_dispatches(served):
     for r in done:
         ref = _single_stream(model, params, dec, r.prompt, r.max_new_tokens)
         assert list(r.output) == ref
+
+
+# ---------------------------------------------------------------------------
+# Draft-model drafter (tiered) + adaptive per-slot spec_k
+# ---------------------------------------------------------------------------
+
+def test_draft_model_drafter_greedy_bitexact(served):
+    """The batched draft-model drafter with the *target* as its own draft
+    model: drafts reproduce the greedy chain, so acceptance is ~total and
+    outputs stay bit-identical to plain decode while advancing k+1 per
+    step.  model-tier dispatches dominate (the model always has signal
+    about itself)."""
+    cfg, model, params, dec = served("glm4-9b")
+    drafter = DraftModelDrafter(model, params, max_batch=4,
+                                max_seq=MAX_SEQ, min_conf=0.0)
+    engine = ServeEngine(model, params, ServeConfig(
+        max_batch=4, max_seq=MAX_SEQ, spec_k=4, drafter=drafter))
+    reqs = _mixed_requests(cfg, lens=[5, 11, 16, 3, 24, 8],
+                           max_news=[12, 9, 6, 12, 8, 14], seed=7)
+    done = engine.serve(reqs)
+    assert len(done) == len(reqs)
+    for r in done:
+        ref = _single_stream(model, params, dec, r.prompt,
+                             r.max_new_tokens)
+        assert list(r.output) == ref, r.rid
+    m = engine.metrics
+    assert m["model_drafts"] > 0
+    assert m["spec_acceptance"] > 0.9          # self-drafting: ~all accept
+    assert m["tokens_per_step"] > 2.0
+    # batched drafting holds the engine's trace discipline: one draft
+    # decode trace total, regardless of slot churn
+    assert drafter.trace_counts["draft_decode"] == 1
+
+
+def test_draft_model_tiered_fallback_dispatch(served):
+    """A draft model gated to zero confidence (min_conf > 1) must never
+    place model-tier drafts: every drafting slot-step tiers down to the
+    n-gram fallback, and outputs stay bit-exact."""
+    cfg, model, params, dec = served("glm4-9b")
+    drafter = DraftModelDrafter(model, params, max_batch=2,
+                                max_seq=MAX_SEQ, min_conf=1.1)
+    engine = ServeEngine(model, params, ServeConfig(
+        max_batch=2, max_seq=MAX_SEQ, spec_k=4, drafter=drafter))
+    rng = np.random.default_rng(2)
+    motif = rng.integers(0, cfg.vocab_size, 3)
+    prompt = np.tile(motif, 6)[:14].astype(np.int32)   # ngram-draftable
+    done = engine.serve([Request(0, prompt, max_new_tokens=10)])
+    assert engine.metrics["model_drafts"] == 0
+    assert engine.metrics["fallback_drafts"] > 0
+    ref = _single_stream(model, params, dec, prompt, 10)
+    assert list(done[0].output) == ref
+
+
+def test_drafter_factory(served):
+    cfg, model, params, _ = served("glm4-9b")
+    assert isinstance(make_drafter("ngram"), NGramDrafter)
+    d = make_drafter("draft_model", target=model, max_batch=2,
+                     max_seq=MAX_SEQ)
+    assert isinstance(d, DraftModelDrafter)
+    assert d.model.cfg.vocab_size == cfg.vocab_size
+    assert d.model.cfg.n_layers < cfg.n_layers or d.model.cfg.d_model \
+        <= cfg.d_model
+    with pytest.raises(ValueError):
+        make_drafter("nope")
+    with pytest.raises(ValueError):
+        make_drafter("draft_model")            # needs model= or target=
+    # the derived tiny arch keeps the target's token space, dense family
+    da = draft_arch(cfg)
+    assert (da.family, da.vocab_size) == ("dense", cfg.vocab_size)
+    # engines resolve factory names themselves (ServeConfig.drafter str)
+    eng = ServeEngine(model, params, ServeConfig(
+        max_batch=2, max_seq=MAX_SEQ, spec_k=2, drafter="ngram"))
+    assert isinstance(eng.drafter, NGramDrafter)
+
+
+class _WrongSession(DraftSession):
+    """Proposes k tokens that (almost) never match the model."""
+
+    def __init__(self, vocab):
+        self.vocab = vocab
+        self.t = 0
+
+    def extend(self, tokens):
+        self.t += len(tokens)
+
+    def draft(self, k):
+        return [(self.t * 7919 + j) % self.vocab for j in range(k)]
+
+
+class _WrongDrafter(Drafter):
+    def __init__(self, vocab):
+        self.vocab = vocab
+
+    def begin(self, context, slot=None, rid=None):
+        return _WrongSession(self.vocab)
+
+
+def test_adaptive_k_shrinks_to_zero_on_undraftable(served):
+    """On an undraftable trace (a drafter whose proposals never land),
+    the adaptive engine must walk every slot's budget to 0 and ride the
+    plain program — measurably fewer verify dispatches than the fixed-k
+    engine on the same trace, identical outputs."""
+    cfg, model, params, dec = served("glm4-9b")
+    trace = lambda: _mixed_requests(cfg, lens=[6, 9], max_news=[40, 40],
+                                    seed=8)
+
+    fixed = ServeEngine(model, params, ServeConfig(
+        max_batch=2, max_seq=MAX_SEQ, spec_k=4,
+        drafter=_WrongDrafter(cfg.vocab_size)))
+    fixed_done = fixed.serve(trace())
+
+    adapt = ServeEngine(model, params, ServeConfig(
+        max_batch=2, max_seq=MAX_SEQ, spec_k=4, spec_adaptive=True,
+        drafter=_WrongDrafter(cfg.vocab_size)))
+    adapt_done = adapt.serve(trace())
+
+    for r_f, r_a in zip(sorted(fixed_done, key=lambda r: r.rid),
+                        sorted(adapt_done, key=lambda r: r.rid)):
+        ref = _single_stream(model, params, dec, r_f.prompt,
+                             r_f.max_new_tokens)
+        assert list(r_f.output) == ref
+        assert list(r_a.output) == ref
+    # the fixed engine verifies every step; the adaptive one only until
+    # the EWMA walks k to 0 (plus sparse probes)
+    assert fixed.metrics["spec_steps"] > 2 * adapt.metrics["spec_steps"]
+    assert 0 in adapt.metrics.spec_k_hist        # slots really hit k=0
+    assert adapt.metrics.spec_k_hist[0] > 0
+
+
+def test_adaptive_k_grows_to_max_on_draftable(served):
+    """On a perfectly draftable trace, budgets must grow from spec_k to
+    the spec_k_max ceiling (full acceptance pushes the EWMA up)."""
+    cfg, model, params, dec = served("glm4-9b")
+    rng = np.random.default_rng(5)
+    p = rng.integers(0, cfg.vocab_size, 7).astype(np.int32)
+    p[0] = 1
+    ref = _single_stream(model, params, dec, p, 40)
+    engine = ServeEngine(model, params, ServeConfig(
+        max_batch=1, max_seq=MAX_SEQ, spec_k=1, spec_k_max=6,
+        spec_adaptive=True, drafter=_ScriptedDrafter({1: ref})))
+    done = engine.serve([Request(0, p, max_new_tokens=40)])
+    assert list(done[0].output) == ref
+    hist = engine.metrics.spec_k_hist
+    assert max(hist) == 6, hist                  # ceiling reached
+    assert engine.metrics["tokens_per_step"] > 2.0
+
+
+def test_serve_metrics_mapping_surface(served):
+    """ServeMetrics keeps the dict surface the benches index: get/in/
+    [], extras for subclass counters, and a flat to_dict for JSON."""
+    from repro.runtime.serve_loop import ServeMetrics
+    m = ServeMetrics()
+    m["decode_steps"] += 3
+    assert m.decode_steps == 3 and m["decode_steps"] == 3
+    assert "slot_occupancy" in m and "nope" not in m
+    assert m.get("nope", 42) == 42
+    m["async_prefills"] = 2                      # unknown key -> extras
+    assert m.extras == {"async_prefills": 2} and m["async_prefills"] == 2
+    m.spec_k_hist[4] = 9
+    d = m.to_dict()
+    assert d["decode_steps"] == 3 and d["async_prefills"] == 2
+    assert d["spec_k_hist"] == {4: 9} and "extras" not in d
+    import json
+    json.dumps(d)                                # JSON-serializable
 
 
 def test_paged_spec_greedy_bitexact_and_rollback_frees(served):
